@@ -1,0 +1,41 @@
+"""Paper Fig 11 + Fig 13: graph algorithms & micro-ops per representation.
+
+Degree / PageRank / BFS / connected components on every device
+representation; results are asserted equal across representations before
+timing (correctness is the paper's point, speed the trade-off).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import algorithms
+
+from .common import emit, paper_datasets, representations, time_call
+
+
+def run() -> list:
+    rows = []
+    for name, g in paper_datasets(scale=0.2).items():
+        reps = representations(g)
+        # correctness gate (duplicate-sensitive algos skip raw C-DUP)
+        ref = np.asarray(algorithms.pagerank(reps["EXP"], num_iters=10))
+        for rname, rep in reps.items():
+            if rname == "C-DUP":
+                continue
+            got = np.asarray(algorithms.pagerank(rep, num_iters=10))
+            assert np.allclose(got, ref, atol=1e-5), (name, rname)
+        for rname, rep in reps.items():
+            dup_ok = rname != "C-DUP"
+            if dup_ok:
+                t = time_call(lambda: algorithms.pagerank(rep, num_iters=10))
+                rows.append((f"pagerank_{name}_{rname}", t * 1e6, "iters=10"))
+                t = time_call(lambda: algorithms.out_degrees(rep))
+                rows.append((f"degree_{name}_{rname}", t * 1e6, ""))
+            t = time_call(lambda: algorithms.bfs(rep, 0, max_iters=30))
+            rows.append((f"bfs_{name}_{rname}", t * 1e6, ""))
+            t = time_call(
+                lambda: algorithms.connected_components(rep, max_iters=30)
+            )
+            rows.append((f"concomp_{name}_{rname}", t * 1e6, ""))
+    emit(rows)
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Table 4 (Giraph port analog): distributed analytics on the mesh.
+
+Shards the condensed engine's edge arrays over the host mesh and runs
+Degree / PageRank / ConnectedComponents on EXP vs condensed+correction,
+reporting times and per-device bytes.  On this container the host mesh is
+1 CPU device; the same code path drives the 512-chip dry-run cell
+(graphgen-paper) — see EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import algorithms, dedup, engine
+from repro.data.synth import barabasi_albert_condensed
+
+from .common import emit, time_call
+
+
+def run() -> list:
+    rows = []
+    datasets = {
+        "S1": barabasi_albert_condensed(5_000, 100, 60.0, 10.0, seed=0),
+        "N1": barabasi_albert_condensed(8_000, 400, 25.0, 8.0, seed=1),
+    }
+    n_dev = len(jax.devices())
+    for name, g in datasets.items():
+        corr = dedup.build_correction(g)
+        reps = {
+            "EXP": engine.to_device(g.expand()),
+            "DEDUPC": engine.to_device(g, correction=corr),
+        }
+        for rname, rep in reps.items():
+            t = time_call(lambda: algorithms.out_degrees(rep), repeats=2)
+            rows.append((f"dist_{name}_degree_{rname}", t * 1e6,
+                         f"devices={n_dev}"))
+            t = time_call(lambda: algorithms.pagerank(rep, num_iters=10), repeats=2)
+            rows.append((f"dist_{name}_pagerank_{rname}", t * 1e6,
+                         f"devices={n_dev}"))
+        cdup = engine.to_device(g)
+        t = time_call(
+            lambda: algorithms.connected_components(cdup, max_iters=30), repeats=2
+        )
+        rows.append((f"dist_{name}_concomp_CDUP", t * 1e6,
+                     f"devices={n_dev}"))
+    emit(rows)
+    return rows

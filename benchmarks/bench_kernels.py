@@ -1,0 +1,41 @@
+"""Kernel-level benchmark: bit-packed block-sparse SpMM vs XLA segment path.
+
+Wall times on CPU are *not* the deliverable (interpret mode executes the
+kernel body in Python); the structural numbers are: packed bytes vs f32
+blocks vs edge list, and blocks touched — these drive the TPU roofline
+(HBM bytes per condensed SpMV).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.condensed import BipartiteEdges
+from repro.kernels.ops import PackedLayer, bitmap_spmm
+from repro.kernels.pack import TILE
+
+from .common import emit, time_call
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, density_exp in [(1024, 12), (2048, 14)]:
+        n_e = n * density_exp
+        key = rng.choice(n * n, size=n_e, replace=False)
+        e = BipartiteEdges(key % n, key // n, n, n)
+        layer = PackedLayer.from_edges(e)
+        x = jnp.asarray(rng.standard_normal((n, 128)).astype(np.float32))
+        t_xla = time_call(lambda: bitmap_spmm(layer, x, backend="xla"))
+        rows.append((f"spmm_xla_n{n}", t_xla * 1e6, f"edges={n_e}"))
+        bsb = layer.bsb
+        f32_blocks = bsb.n_nonzero_blocks * TILE * TILE * 4
+        edge_list = n_e * 8
+        rows.append((
+            f"spmm_pack_n{n}", 0.0,
+            f"packed_bytes={bsb.nbytes()};f32_block_bytes={f32_blocks};"
+            f"edge_list_bytes={edge_list};blocks={bsb.n_nonzero_blocks};"
+            f"max_k={bsb.max_k}",
+        ))
+    emit(rows)
+    return rows

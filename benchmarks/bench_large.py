@@ -1,0 +1,81 @@
+"""Paper Table 3: large datasets — C-DUP / DEDUP-C(BITMAP role) / EXP.
+
+Layered (multi-layer) and single-layer condensed graphs with controlled
+join selectivities (App. C.2 generator), scaled to CPU budget.  On the
+TPU engine the BITMAP column's role is played by DEDUP-C (DESIGN.md §2);
+host BITMAP-2 preprocessing time is reported alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import algorithms, dedup, engine
+from repro.data.synth import layered_condensed
+
+from .common import emit, time_call
+
+
+def run() -> list:
+    rows = []
+    datasets = {
+        # layered: same join structure as TPCH (2 virtual layers)
+        "layered_1": layered_condensed(
+            30_000, [12_000, 12_000], [60_000, 40_000, 60_000], seed=0,
+            symmetric=False,
+        ),
+        "layered_2": layered_condensed(
+            30_000, [6_000, 6_000], [60_000, 40_000, 60_000], seed=1,
+            symmetric=False,
+        ),
+        "single_1": layered_condensed(40_000, [10_000], [80_000, 80_000], seed=2),
+        "single_2": layered_condensed(20_000, [200], [60_000, 60_000], seed=3),
+    }
+    for name, g in datasets.items():
+        t0 = time.perf_counter()
+        exp = g.expand()
+        t_exp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        corr = dedup.build_correction(g)
+        t_corr = time.perf_counter() - t0
+        rows.append((f"large_{name}_expand", t_exp * 1e6,
+                     f"edges={exp.n_edges};cdup_edges={g.n_edges_condensed}"))
+        rows.append((f"large_{name}_correction", t_corr * 1e6,
+                     f"nnz={len(corr[0])}"))
+        reps = {
+            "CDUP": engine.to_device(g),
+            "DEDUPC": engine.to_device(g, correction=corr),
+            "EXP": engine.to_device(exp),
+        }
+        for rname, rep in reps.items():
+            t = time_call(lambda: algorithms.bfs(rep, 0, max_iters=20), repeats=2)
+            rows.append((f"large_{name}_bfs_{rname}", t * 1e6, ""))
+            if rname != "CDUP":
+                t = time_call(lambda: algorithms.pagerank(rep, num_iters=5), repeats=2)
+                rows.append((f"large_{name}_pr_{rname}", t * 1e6, "iters=5"))
+        if dedup.is_symmetric_single_layer(g):
+            t0 = time.perf_counter()
+            dedup.bitmap2(g)
+            rows.append((f"large_{name}_bitmap2_prep", (time.perf_counter()-t0) * 1e6, ""))
+        elif not g.is_single_layer():
+            # paper §5.2.2: multi-layer BITMAP = collapse-to-single-layer
+            # (space-explosion-guarded) + single-layer BITMAP-2
+            from repro.core.condensed import collapse_to_single_layer
+
+            t0 = time.perf_counter()
+            try:
+                flat = collapse_to_single_layer(g, max_growth=10.0)
+                rep = dedup.bitmap2(flat)
+                rows.append((
+                    f"large_{name}_bitmap2_multilayer",
+                    (time.perf_counter() - t0) * 1e6,
+                    f"bitmaps={rep.n_bitmaps};collapsed_edges={flat.n_edges_condensed}",
+                ))
+            except ValueError as e:
+                rows.append((
+                    f"large_{name}_bitmap2_multilayer", 0.0,
+                    f"skipped={str(e)[:50]}",
+                ))
+    emit(rows)
+    return rows

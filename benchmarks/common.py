@@ -1,0 +1,71 @@
+"""Shared benchmark utilities: datasets scaled for CPU, timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import dedup, engine
+from repro.data.synth import barabasi_albert_condensed, layered_condensed
+
+
+def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if r is not None else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def paper_datasets(scale: float = 1.0) -> Dict[str, object]:
+    """Fig-10-style datasets (scaled to CPU-friendly sizes, same regimes):
+
+    dblp_like   : many small virtual nodes (avg size 2)
+    imdb_like   : fewer, larger virtual nodes (avg size 10)
+    synthetic_1 : many virtual nodes, avg 7
+    synthetic_2 : few, huge overlapping cliques (avg 94)
+    """
+    s = scale
+    return {
+        "dblp_like": barabasi_albert_condensed(
+            int(5234 * s), int(4100 * s), 2.5, 1.0, seed=1
+        ),
+        "imdb_like": barabasi_albert_condensed(
+            int(4396 * s), int(1000 * s), 10.0, 4.0, seed=2
+        ),
+        "synthetic_1": barabasi_albert_condensed(
+            int(2000 * s), int(2000 * s), 7.0, 3.0, seed=3
+        ),
+        "synthetic_2": barabasi_albert_condensed(
+            int(2000 * s), int(60 * s) + 2, 94.0, 20.0, seed=4
+        ),
+    }
+
+
+def representations(g) -> Dict[str, object]:
+    """All device representations of one condensed graph."""
+    corr = dedup.build_correction(g)
+    reps = {
+        "EXP": engine.to_device(g.expand()),
+        "C-DUP": engine.to_device(g),
+        "DEDUP-C": engine.to_device(g, correction=corr),
+    }
+    if dedup.is_symmetric_single_layer(g):
+        d1 = dedup.dedup1_greedy_virtual_first(g)
+        reps["DEDUP-1"] = engine.to_device(d1.graph, deduplicated=True)
+    return reps
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    """CSV rows per the harness contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

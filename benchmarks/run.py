@@ -1,0 +1,78 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers as
+comment lines).  Roofline terms come from the dry-run JSON artifacts
+(results/dryrun) when present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+SECTIONS = [
+    ("extraction", "Table 1: condensed vs full extraction"),
+    ("compression", "Fig 10: representation sizes"),
+    ("algorithms", "Fig 11/13: algorithm performance per representation"),
+    ("dedup", "Fig 12: dedup algorithm runtimes"),
+    ("large", "Table 3: large datasets"),
+    ("distributed", "Table 4: distributed analytics"),
+    ("kernels", "kernel structural benchmark"),
+]
+
+
+def run_roofline_summary() -> None:
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(d):
+        print("# roofline: no dry-run artifacts (run repro.launch.dryrun --all)")
+        return
+    print("# roofline summary from results/dryrun")
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(d, fname)) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            print(f"roofline_{fname[:-5]},0.0,FAILED={r.get('error','?')[:60]}")
+            continue
+        dom = r["dominant"]
+        print(
+            f"roofline_{fname[:-5]},{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+            f"dominant={dom};compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};collective_ms={r['collective_s']*1e3:.2f};"
+            f"useful_ratio={r['useful_ratio']:.3f}"
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run one section")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    for name, title in SECTIONS:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {title} ===")
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # a failing section must not hide the rest
+            print(f"bench_{name}_FAILED,0.0,{type(e).__name__}:{e}")
+            import traceback
+
+            traceback.print_exc()
+            return 1
+    if args.only in (None, "roofline"):
+        print("# === Roofline (from dry-run artifacts) ===")
+        run_roofline_summary()
+    print(f"# total bench time: {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""Arch configs: exact published configurations + reduced smoke variants.
+
+``registry.get_arch(name)`` resolves ``--arch <id>``.
+"""
+from .base import GNNConfig, MoEConfig, RecsysConfig, TransformerConfig
+from .registry import get_arch, list_archs, shapes_for
+
+__all__ = [
+    "GNNConfig",
+    "MoEConfig",
+    "RecsysConfig",
+    "TransformerConfig",
+    "get_arch",
+    "list_archs",
+    "shapes_for",
+]

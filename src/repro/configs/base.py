@@ -1,0 +1,163 @@
+"""Config dataclasses for every architecture family.
+
+Each assigned architecture gets one file in this package defining
+``CONFIG`` (exact published numbers), ``SMOKE`` (reduced same-family
+config for CPU tests), ``SHAPES`` (its input-shape set), and
+``input_specs(shape_name, smoke=False)`` -> dict of ShapeDtypeStruct.
+
+Sharding is configured *per arch* through ``sharding_rules``: a mapping
+from logical axis names to mesh axis names (or None = replicate).  Rules
+must respect divisibility (e.g. granite's 24 heads / 40 experts do not
+divide a 16-way model axis, so those configs shard d_ff instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+__all__ = [
+    "MoEConfig",
+    "TransformerConfig",
+    "GNNConfig",
+    "RecsysConfig",
+    "DEFAULT_LM_RULES",
+]
+
+# Logical axes used by the model code; rules map them to mesh axes.
+# mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single.
+DEFAULT_LM_RULES: Dict[str, object] = {
+    "batch": ("pod", "data"),   # data parallel (pod composes with data)
+    "seq": None,                # attention-internal seq axis
+    "act_seq": None,            # residual-stream sequence parallelism (SP)
+    "expert_capacity": None,    # MoE capacity-dim sharding (granite)
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,          # long-context decode shards the KV cache seq
+    "embed": None,              # activation embed dim
+    "embed_param": "data",      # FSDP weight shard
+    "heads": "model",           # TP over query heads
+    "kv_heads": None,           # replicated unless kv_heads % model == 0
+    "ff": "model",              # TP over FFN hidden
+    "vocab": "model",           # vocab-parallel embedding / logits
+    "experts": "model",         # EP (MoE) when divisible
+    "expert_ff": None,
+    "edges": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "items": "model",           # recsys embedding rows
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int               # per-expert FFN hidden
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+    # 'sort'  : global sort-based dispatch (XLA SPMD resolves the scatter —
+    #           baseline; lowers to large all-reduces, see §Perf)
+    # 'a2a'   : shard_map expert-parallel all-to-all dispatch (optimized)
+    dispatch: str = "sort"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"                 # activation/compute dtype
+    param_dtype: str = "float32"
+    opt_state_dtype: str = "float32"        # bf16 for very large models
+    remat_policy: str = "minimal"           # 'none' | 'minimal' | 'full'
+    scan_layers: bool = True
+    attn_block_q: int = 512                 # flash attention block sizes
+    attn_block_kv: int = 1024
+    microbatches: int = 1                   # gradient accumulation steps
+    grad_accum_dtype: str = "float32"       # bf16 halves accumulation HBM
+    sharding_rules: Mapping[str, object] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_LM_RULES)
+    )
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding + layers [+ experts])."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.moe is not None:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+        else:
+            ff = 3 * d * self.d_ff
+        norms = 2 * d
+        per_layer = attn + ff + norms
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameters — MoE counts top_k experts."""
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        dense = self.n_params() - self.n_layers * (
+            self.moe.n_experts * 3 * d * self.moe.d_expert
+        )
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_expert
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                    # 'meshgraphnet' | 'graphcast' | 'schnet' | 'dimenet'
+    n_layers: int
+    d_hidden: int
+    # family-specific knobs (unused ones stay at defaults)
+    mlp_layers: int = 2
+    aggregator: str = "sum"
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_spherical: int = 7
+    n_radial: int = 6
+    n_bilinear: int = 8
+    mesh_refinement: int = 0
+    n_vars: int = 0
+    d_out: int = 1
+    triplet_factor: int = 8      # dimenet: triplets per edge budget
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat_policy: str = "minimal"
+    sharding_rules: Mapping[str, object] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_LM_RULES)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    n_items: int
+    dropout: float = 0.0
+    pad_embed_to: Optional[int] = None   # beyond-paper MXU alignment option
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    sharding_rules: Mapping[str, object] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_LM_RULES)
+    )
+
+    @property
+    def d(self) -> int:
+        return self.pad_embed_to or self.embed_dim

@@ -1,0 +1,32 @@
+"""GraphGen core: the paper's contribution as a composable library.
+
+Public API:
+
+    from repro.core import extract, parse, CondensedGraph
+    from repro.core import engine, algorithms, dedup, advisor
+"""
+from .condensed import BipartiteEdges, Chain, CondensedGraph, ExpandedGraph
+from .dsl import ExtractionQuery, ParseError, parse
+from .extract import ExtractionResult, extract, extract_query
+from .relational import Catalog, Table
+from .advisor import recommend
+from .serialize import export_edge_list, load_condensed, save_condensed
+
+__all__ = [
+    "BipartiteEdges",
+    "Chain",
+    "CondensedGraph",
+    "ExpandedGraph",
+    "ExtractionQuery",
+    "ExtractionResult",
+    "ParseError",
+    "Catalog",
+    "Table",
+    "parse",
+    "extract",
+    "extract_query",
+    "recommend",
+    "save_condensed",
+    "load_condensed",
+    "export_edge_list",
+]

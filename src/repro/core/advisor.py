@@ -1,0 +1,72 @@
+"""Representation advisor (paper §6.5).
+
+Given a freshly extracted C-DUP graph and workload hints, recommend the
+in-memory representation:
+
+* expansion small (< ``expand_margin`` growth)       -> EXP
+* algorithms touch a small fraction of the graph     -> C-DUP
+* multi-pass duplicate-sensitive analytics           -> BITMAP-2 / DEDUP-C
+* repeated analyses over time (amortized preprocessing) -> DEDUP-1/DEDUP-2
+
+On the TPU engine the BITMAP traversal semantics collapse into DEDUP-C
+(see DESIGN.md §2), so the device recommendation column differs from the
+paper's host recommendation where applicable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .condensed import CondensedGraph
+
+__all__ = ["Recommendation", "recommend"]
+
+
+@dataclasses.dataclass
+class Recommendation:
+    host_representation: str
+    device_representation: str
+    reason: str
+    expansion_ratio: float
+    duplication_ratio: float
+
+
+def recommend(
+    graph: CondensedGraph,
+    workload: str = "multi_pass",          # 'point' | 'single_pass' | 'multi_pass' | 'repeated'
+    duplicate_sensitive: bool = True,
+    expand_margin: float = 1.2,
+) -> Recommendation:
+    cond = max(graph.n_edges_condensed, 1)
+    exp_edges = graph.n_edges_expanded()
+    ratio = exp_edges / cond
+    dup = graph.duplication_ratio()
+
+    if ratio <= expand_margin:
+        return Recommendation(
+            "EXP", "EXP",
+            f"expansion grows edges only {ratio:.2f}x (<= {expand_margin}); "
+            "paper §6.5 suggests expanding outright",
+            ratio, dup,
+        )
+    if not duplicate_sensitive or workload == "point":
+        return Recommendation(
+            "C-DUP", "C-DUP",
+            "duplicate-insensitive or point workload: operate on C-DUP "
+            "directly (paper §4.1/§6.5)",
+            ratio, dup,
+        )
+    if workload == "repeated":
+        rep = "DEDUP-2" if graph.is_single_layer() else "DEDUP-1"
+        return Recommendation(
+            rep, "DEDUP-C",
+            "repeated analyses amortize one-time dedup rewriting "
+            "(paper §6.5); device engine uses the vectorized correction",
+            ratio, dup,
+        )
+    return Recommendation(
+        "BITMAP-2", "DEDUP-C",
+        "multi-pass duplicate-sensitive analytics: BITMAP-2 on host "
+        "iterators; correction-SpMV on device (DESIGN.md §2)",
+        ratio, dup,
+    )

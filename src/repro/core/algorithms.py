@@ -1,0 +1,259 @@
+"""Graph algorithms over any device representation (paper §3.4, §6.1.2).
+
+Each algorithm is a pure function of a :class:`~repro.core.engine.DeviceGraph`
+pytree, jit-compatible, and by construction produces identical results on
+EXP / DEDUP-1 / DEDUP-C (duplicate-sensitive) or additionally on raw C-DUP
+(duplicate-insensitive: BFS, connected components, reachability).
+
+The vertex-centric API of the paper maps to :func:`vertex_program`: the
+user supplies ``compute(state, messages) -> state`` and a message semiring;
+supersteps run under ``lax.while_loop`` with a vote-to-halt predicate.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .engine import DeviceGraph, propagate
+from .semiring import MIN_PLUS, OR_AND, PLUS_TIMES, Semiring
+
+__all__ = [
+    "out_degrees",
+    "in_degrees",
+    "pagerank",
+    "bfs",
+    "reachable",
+    "connected_components",
+    "common_neighbor_counts",
+    "vertex_program",
+]
+
+
+def _n(graph: DeviceGraph) -> int:
+    return graph.n if hasattr(graph, "n") else graph.n_real
+
+
+# ---------------------------------------------------------------------------
+# Degree (duplicate-SENSITIVE: needs dedup; paper §6.4 Degree benchmark)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def out_degrees(graph: DeviceGraph) -> jnp.ndarray:
+    ones = jnp.ones((_n(graph),), dtype=jnp.float32)
+    return propagate(graph, ones, PLUS_TIMES, reverse=True)
+
+
+@jax.jit
+def in_degrees(graph: DeviceGraph) -> jnp.ndarray:
+    ones = jnp.ones((_n(graph),), dtype=jnp.float32)
+    return propagate(graph, ones, PLUS_TIMES)
+
+
+# ---------------------------------------------------------------------------
+# PageRank (duplicate-SENSITIVE)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_iters",))
+def pagerank(
+    graph: DeviceGraph,
+    damping: float = 0.85,
+    num_iters: int = 20,
+) -> jnp.ndarray:
+    """Standard power-iteration PageRank with dangling redistribution."""
+    n = _n(graph)
+    deg = out_degrees(graph)
+    x = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def body(_, x):
+        contrib = jnp.where(deg > 0, x / jnp.maximum(deg, 1.0), 0.0)
+        y = propagate(graph, contrib, PLUS_TIMES)
+        dangling = jnp.sum(jnp.where(deg > 0, 0.0, x))
+        y = y + dangling / n
+        return (1.0 - damping) / n + damping * y
+
+    return jax.lax.fori_loop(0, num_iters, body, x)
+
+
+# ---------------------------------------------------------------------------
+# BFS & reachability (duplicate-INSENSITIVE: run directly on C-DUP)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def bfs(graph: DeviceGraph, source: int, max_iters: Optional[int] = None) -> jnp.ndarray:
+    """Hop distances from ``source`` (inf where unreachable)."""
+    n = _n(graph)
+    max_iters = n if max_iters is None else max_iters
+    dist0 = jnp.full((n,), jnp.inf, dtype=jnp.float32).at[source].set(0.0)
+
+    def cond(state):
+        dist, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        dist, _, it = state
+        relaxed = propagate(graph, dist, MIN_PLUS, hop_weight=1.0)
+        new = jnp.minimum(dist, relaxed)
+        return new, jnp.any(new < dist), it + 1
+
+    dist, _, _ = jax.lax.while_loop(cond, body, (dist0, jnp.array(True), 0))
+    return dist
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def reachable(
+    graph: DeviceGraph, source: int, max_iters: Optional[int] = None
+) -> jnp.ndarray:
+    """Boolean (0/1) reachability from ``source`` under OR-AND."""
+    n = _n(graph)
+    max_iters = n if max_iters is None else max_iters
+    r0 = jnp.zeros((n,), dtype=jnp.float32).at[source].set(1.0)
+
+    def cond(state):
+        r, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, _, it = state
+        nxt = jnp.maximum(r, propagate(graph, r, OR_AND))
+        return nxt, jnp.any(nxt > r), it + 1
+
+    r, _, _ = jax.lax.while_loop(cond, body, (r0, jnp.array(True), 0))
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Connected components (duplicate-INSENSITIVE) — min-label propagation
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iters", "symmetric"))
+def connected_components(
+    graph: DeviceGraph,
+    max_iters: Optional[int] = None,
+    symmetric: bool = True,
+) -> jnp.ndarray:
+    """Min-label propagation; labels = component representative ids.
+
+    With ``symmetric=False`` the graph is treated as undirected by also
+    propagating along reversed edges each superstep (paper graphs from
+    symmetric extraction queries already contain both directions).
+    """
+    n = _n(graph)
+    max_iters = n if max_iters is None else max_iters
+    labels0 = jnp.arange(n, dtype=jnp.float32)
+
+    def cond(state):
+        labels, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        nxt = jnp.minimum(labels, propagate(graph, labels, MIN_PLUS, hop_weight=0.0))
+        if not symmetric:
+            nxt = jnp.minimum(
+                nxt, propagate(graph, labels, MIN_PLUS, hop_weight=0.0, reverse=True)
+            )
+        return nxt, jnp.any(nxt < labels), it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (labels0, jnp.array(True), 0))
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Common-neighbor counting — the condensed rep's native strength:
+# M = B·Bᵀ entries ARE co-occurrence counts, so *duplication is signal*
+# (beyond-paper: link prediction / collaboration strength, free on C-DUP).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def common_neighbor_counts(graph: DeviceGraph, seeds: jnp.ndarray) -> jnp.ndarray:
+    """For a one-hot/indicator seed vector: per-node path-multiplicity mass.
+
+    On C-DUP this counts shared virtual entities (e.g. #co-authored papers)
+    — exactly the quantity dedup would destroy; exposed as a feature.
+    """
+    return propagate(graph, seeds, PLUS_TIMES, allow_duplicates=True)
+
+
+# ---------------------------------------------------------------------------
+# Vertex-centric API (paper §3.4) — superstep driver
+# ---------------------------------------------------------------------------
+
+class VertexProgram(NamedTuple):
+    """``compute`` folds incoming aggregated messages into vertex state."""
+
+    semiring: Semiring
+    to_message: Callable[[jnp.ndarray], jnp.ndarray]
+    compute: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@partial(jax.jit, static_argnames=("program", "max_supersteps"))
+def vertex_program(
+    graph: DeviceGraph,
+    program: VertexProgram,
+    init_state: jnp.ndarray,
+    max_supersteps: int = 50,
+) -> jnp.ndarray:
+    def cond(state):
+        s, halted, it = state
+        return jnp.logical_and(~halted, it < max_supersteps)
+
+    def body(state):
+        s, _, it = state
+        msgs = propagate(graph, program.to_message(s), program.semiring)
+        s_new = program.compute(s, msgs)
+        halted = jnp.all(jnp.abs(s_new - s) < 1e-12)
+        return s_new, halted, it + 1
+
+    s, _, _ = jax.lax.while_loop(
+        cond, body, (init_state, jnp.array(False), 0)
+    )
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Extended analytics (beyond the paper's benchmarked set, same engine)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_iters",))
+def personalized_pagerank(
+    graph: DeviceGraph,
+    seeds: jnp.ndarray,            # (n,) restart distribution (sums to 1)
+    damping: float = 0.85,
+    num_iters: int = 20,
+) -> jnp.ndarray:
+    """PageRank with restart at ``seeds`` (recommendation-style queries)."""
+    n = _n(graph)
+    deg = out_degrees(graph)
+    x = seeds.astype(jnp.float32)
+
+    def body(_, x):
+        contrib = jnp.where(deg > 0, x / jnp.maximum(deg, 1.0), 0.0)
+        y = propagate(graph, contrib, PLUS_TIMES)
+        dangling = jnp.sum(jnp.where(deg > 0, 0.0, x))
+        y = y + dangling * seeds
+        return (1.0 - damping) * seeds + damping * y
+
+    return jax.lax.fori_loop(0, num_iters, body, x)
+
+
+@partial(jax.jit, static_argnames=("num_iters",))
+def hits(
+    graph: DeviceGraph, num_iters: int = 30
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hubs & authorities by power iteration (duplicate-sensitive)."""
+    n = _n(graph)
+    h = jnp.full((n,), 1.0 / jnp.sqrt(n), dtype=jnp.float32)
+
+    def body(_, carry):
+        h, a = carry
+        a = propagate(graph, h, PLUS_TIMES)            # auth = sum of in-hubs
+        a = a / jnp.maximum(jnp.linalg.norm(a), 1e-12)
+        h = propagate(graph, a, PLUS_TIMES, reverse=True)
+        h = h / jnp.maximum(jnp.linalg.norm(h), 1e-12)
+        return h, a
+
+    h, a = jax.lax.fori_loop(0, num_iters, body, (h, jnp.zeros_like(h)))
+    return h, a

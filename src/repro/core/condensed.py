@@ -1,0 +1,468 @@
+"""Condensed graph representations (C-DUP and friends).
+
+The paper's central data structure: a directed acyclic multi-layer graph in
+which *real* nodes are connected only through layers of *virtual* nodes
+(one layer per postponed large-output join attribute).  An edge ``u -> v``
+exists in the *expanded* graph iff at least one directed path
+``u_s -> ... -> v_t`` exists here; the number of such paths is the pair's
+*multiplicity* (the duplication problem, paper §4.1).
+
+Linear-algebra view (see DESIGN.md §2): a single-layer chain is an
+incidence pair ``(B_in, B_out)`` and the expanded multiplicity matrix is
+``M = B_in · B_out``; a k-layer chain is the product of k+1 sparse
+matrices.  All propagation in :mod:`repro.core.engine` exploits this
+factorization instead of materializing ``M``.
+
+Everything in this module is host-side NumPy — extraction and dedup are
+irregular/preprocessing work; the device-facing arrays are produced by
+``to_device_csr`` helpers consumed by the JAX engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BipartiteEdges",
+    "Chain",
+    "CondensedGraph",
+    "ExpandedGraph",
+    "CSR",
+    "build_csr",
+]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BipartiteEdges:
+    """Directed edges from one level to the next (COO)."""
+
+    src: np.ndarray
+    dst: np.ndarray
+    n_src: int
+    n_dst: int
+
+    def __post_init__(self) -> None:
+        self.src = np.asarray(self.src, dtype=np.int64)
+        self.dst = np.asarray(self.dst, dtype=np.int64)
+        if self.src.shape != self.dst.shape:
+            raise ValueError("src/dst shape mismatch")
+        if self.src.size:
+            if self.src.max() >= self.n_src or self.src.min() < 0:
+                raise ValueError("src id out of range")
+            if self.dst.max() >= self.n_dst or self.dst.min() < 0:
+                raise ValueError("dst id out of range")
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.size)
+
+    def reversed(self) -> "BipartiteEdges":
+        return BipartiteEdges(self.dst.copy(), self.src.copy(), self.n_dst, self.n_src)
+
+    def sorted_by_src(self) -> "BipartiteEdges":
+        order = np.lexsort((self.dst, self.src))
+        return BipartiteEdges(self.src[order], self.dst[order], self.n_src, self.n_dst)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n_src)
+
+    def in_degrees(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.n_dst)
+
+    def nbytes(self) -> int:
+        return int(self.src.nbytes + self.dst.nbytes)
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row view of a BipartiteEdges (host-side)."""
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    n_src: int
+    n_dst: int
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return self.indices[self.indptr[i] : self.indptr[i + 1]]
+
+
+def build_csr(edges: BipartiteEdges) -> CSR:
+    order = np.argsort(edges.src, kind="stable")
+    indices = edges.dst[order]
+    counts = np.bincount(edges.src, minlength=edges.n_src)
+    indptr = np.zeros(edges.n_src + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSR(indptr, indices, edges.n_src, edges.n_dst)
+
+
+@dataclasses.dataclass
+class Chain:
+    """One Edges-statement's condensed path structure.
+
+    ``edges[0]`` goes real -> virtual-layer-1, ``edges[-1]`` goes
+    virtual-layer-k -> real; middle entries connect consecutive virtual
+    layers.  ``len(edges) == n_layers + 1`` and ``n_layers >= 1``.
+    """
+
+    edges: List[BipartiteEdges]
+
+    def __post_init__(self) -> None:
+        if len(self.edges) < 2:
+            raise ValueError("a Chain needs at least one virtual layer")
+        for a, b in zip(self.edges, self.edges[1:]):
+            if a.n_dst != b.n_src:
+                raise ValueError("inconsistent layer sizes in chain")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.edges) - 1
+
+    @property
+    def n_real(self) -> int:
+        return self.edges[0].n_src
+
+    @property
+    def layer_sizes(self) -> List[int]:
+        return [e.n_dst for e in self.edges[:-1]]
+
+    @property
+    def n_virtual(self) -> int:
+        return sum(self.layer_sizes)
+
+    @property
+    def n_edges(self) -> int:
+        return sum(e.n_edges for e in self.edges)
+
+    def nbytes(self) -> int:
+        return sum(e.nbytes() for e in self.edges)
+
+    # -- expansion -----------------------------------------------------------
+    def path_pairs(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """All (u, v, multiplicity) realized by this chain.
+
+        Materializes the expansion — only used by EXP conversion, oracle
+        tests, and DEDUP-C correction building.  Work/memory is
+        O(#expanded paths), chunked over leading-layer nodes to bound the
+        peak (paper: this is exactly the cost the condensed rep avoids at
+        query time).
+        """
+        src, dst, mult = _compose_chain(self.edges)
+        return src, dst, mult
+
+
+def _compose_pair(
+    left: Tuple[np.ndarray, np.ndarray, np.ndarray],
+    right: BipartiteEdges,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Compose (u -> m, mult) with bipartite (m -> v): returns (u -> v, mult)."""
+    lsrc, lmid, lmult = left
+    # Sort right edges by src so each mid id owns a contiguous run.
+    order = np.argsort(right.src, kind="stable")
+    rsrc_sorted = right.src[order]
+    rdst_sorted = right.dst[order]
+    starts = np.searchsorted(rsrc_sorted, lmid, side="left")
+    ends = np.searchsorted(rsrc_sorted, lmid, side="right")
+    counts = ends - starts
+    total = int(counts.sum())
+    usrc = np.repeat(lsrc, counts)
+    umult = np.repeat(lmult, counts)
+    if total:
+        offs = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+        udst = rdst_sorted[np.repeat(starts, counts) + offs]
+    else:
+        udst = np.empty(0, dtype=np.int64)
+    # Aggregate duplicate (u, v) pairs, summing multiplicities.
+    return _aggregate_pairs(usrc, udst, umult, right.n_dst)
+
+
+def _aggregate_pairs(
+    src: np.ndarray, dst: np.ndarray, mult: np.ndarray, n_dst: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    if src.size == 0:
+        return src, dst, mult
+    key = src * np.int64(n_dst) + dst
+    uniq, inverse = np.unique(key, return_inverse=True)
+    summed = np.bincount(inverse, weights=mult.astype(np.float64))
+    return (uniq // n_dst).astype(np.int64), (uniq % n_dst).astype(np.int64), summed.astype(np.int64)
+
+
+def _compose_chain(
+    edges: Sequence[BipartiteEdges],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    acc = (edges[0].src, edges[0].dst, np.ones(edges[0].n_edges, dtype=np.int64))
+    acc = _aggregate_pairs(*acc, edges[0].n_dst)
+    for e in edges[1:]:
+        acc = _compose_pair(acc, e)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Expanded graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExpandedGraph:
+    """The EXP representation: unique (src, dst) pairs + path multiplicity."""
+
+    src: np.ndarray
+    dst: np.ndarray
+    multiplicity: np.ndarray
+    n: int
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.size)
+
+    def nbytes(self) -> int:
+        return int(self.src.nbytes + self.dst.nbytes)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n)
+
+    def adjacency_multiplicity(self) -> np.ndarray:
+        """Dense multiplicity matrix — tiny-graph tests only."""
+        m = np.zeros((self.n, self.n), dtype=np.int64)
+        np.add.at(m, (self.src, self.dst), self.multiplicity)
+        return m
+
+    def without_self_loops(self) -> "ExpandedGraph":
+        keep = self.src != self.dst
+        return ExpandedGraph(
+            self.src[keep], self.dst[keep], self.multiplicity[keep], self.n
+        )
+
+
+# ---------------------------------------------------------------------------
+# The C-DUP container
+# ---------------------------------------------------------------------------
+
+class CondensedGraph:
+    """Union of condensed chains + direct edges over one real-node set.
+
+    This is C-DUP exactly as extracted: duplication (multiplicity > 1) is
+    allowed and expected.  Dedup algorithms in :mod:`repro.core.dedup`
+    consume this and emit either a rewritten ``CondensedGraph`` (DEDUP-1),
+    bitmap side-structures (BITMAP-1/2), or a correction edge list
+    (DEDUP-C).
+    """
+
+    def __init__(
+        self,
+        n_real: int,
+        chains: Sequence[Chain] = (),
+        direct: Optional[BipartiteEdges] = None,
+        node_properties: Optional[Dict[str, np.ndarray]] = None,
+        node_type: Optional[np.ndarray] = None,
+    ) -> None:
+        self.n_real = int(n_real)
+        self.chains = list(chains)
+        for c in self.chains:
+            if c.n_real != self.n_real or c.edges[-1].n_dst != self.n_real:
+                raise ValueError("chain endpoints must be the real node set")
+        if direct is not None and (
+            direct.n_src != self.n_real or direct.n_dst != self.n_real
+        ):
+            raise ValueError("direct edges must connect real nodes")
+        self.direct = direct
+        self.node_properties = dict(node_properties or {})
+        self.node_type = node_type  # heterogeneous graphs: int type id per node
+
+    # -- bookkeeping ----------------------------------------------------------
+    @property
+    def n_virtual(self) -> int:
+        return sum(c.n_virtual for c in self.chains)
+
+    @property
+    def n_edges_condensed(self) -> int:
+        n = sum(c.n_edges for c in self.chains)
+        if self.direct is not None:
+            n += self.direct.n_edges
+        return n
+
+    @property
+    def max_layers(self) -> int:
+        return max((c.n_layers for c in self.chains), default=0)
+
+    def is_single_layer(self) -> bool:
+        return all(c.n_layers == 1 for c in self.chains)
+
+    def nbytes(self) -> int:
+        n = sum(c.nbytes() for c in self.chains)
+        if self.direct is not None:
+            n += self.direct.nbytes()
+        return n
+
+    # -- semantics ------------------------------------------------------------
+    def multiplicities(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """All expanded (u, v, multiplicity) triples (host, O(expansion))."""
+        parts_s: List[np.ndarray] = []
+        parts_d: List[np.ndarray] = []
+        parts_m: List[np.ndarray] = []
+        for c in self.chains:
+            s, d, m = c.path_pairs()
+            parts_s.append(s)
+            parts_d.append(d)
+            parts_m.append(m)
+        if self.direct is not None and self.direct.n_edges:
+            parts_s.append(self.direct.src)
+            parts_d.append(self.direct.dst)
+            parts_m.append(np.ones(self.direct.n_edges, dtype=np.int64))
+        if not parts_s:
+            z = np.empty(0, dtype=np.int64)
+            return z, z, z
+        return _aggregate_pairs(
+            np.concatenate(parts_s),
+            np.concatenate(parts_d),
+            np.concatenate(parts_m),
+            self.n_real,
+        )
+
+    def expand(self, drop_self_loops: bool = False) -> ExpandedGraph:
+        """Materialize EXP (paper's baseline representation)."""
+        s, d, m = self.multiplicities()
+        g = ExpandedGraph(s, d, m, self.n_real)
+        return g.without_self_loops() if drop_self_loops else g
+
+    def n_edges_expanded(self) -> int:
+        s, _, _ = self.multiplicities()
+        return int(s.size)
+
+    def duplication_ratio(self) -> float:
+        """Mean path multiplicity over expanded edges (1.0 = no duplication)."""
+        _, _, m = self.multiplicities()
+        return float(m.mean()) if m.size else 1.0
+
+    # -- preprocessing (paper §4.2 step 6) -------------------------------------
+    def preprocess(self, expand_threshold: Optional[float] = None) -> "CondensedGraph":
+        """Expand virtual nodes whose expansion does not grow the graph.
+
+        Paper rule: expand virtual node with ``in*out <= in + out + 1``.
+        Implemented for single-layer chains (the common case; multi-layer
+        middle nodes would need a DAG rep — those chains pass through).
+        """
+        new_chains: List[Chain] = []
+        direct_s: List[np.ndarray] = [
+            self.direct.src if self.direct is not None else np.empty(0, np.int64)
+        ]
+        direct_d: List[np.ndarray] = [
+            self.direct.dst if self.direct is not None else np.empty(0, np.int64)
+        ]
+        for chain in self.chains:
+            if chain.n_layers != 1:
+                new_chains.append(chain)
+                continue
+            e_in, e_out = chain.edges
+            ins = e_in.in_degrees()  # per virtual node
+            outs = e_out.out_degrees()
+            cost_keep = ins + outs + 1
+            cost_expand = ins * outs
+            expand_mask = cost_expand <= cost_keep
+            if not expand_mask.any():
+                new_chains.append(chain)
+                continue
+            # Direct edges from expanded virtual nodes.
+            keep_in = ~expand_mask[e_in.dst]
+            keep_out = ~expand_mask[e_out.src]
+            sub_in = BipartiteEdges(
+                e_in.src[~keep_in], e_in.dst[~keep_in], e_in.n_src, e_in.n_dst
+            )
+            sub_out = BipartiteEdges(
+                e_out.src[~keep_out], e_out.dst[~keep_out], e_out.n_src, e_out.n_dst
+            )
+            if sub_in.n_edges:
+                # Preserve path multiplicity: expanding a virtual node keeps
+                # each path as its own direct edge (dedup happens later).
+                s, d, m = _compose_chain([sub_in, sub_out])
+                direct_s.append(np.repeat(s, m))
+                direct_d.append(np.repeat(d, m))
+            # Remaining virtual nodes, re-indexed densely.
+            remap = -np.ones(e_in.n_dst, dtype=np.int64)
+            kept = np.flatnonzero(~expand_mask)
+            remap[kept] = np.arange(kept.size)
+            if kept.size:
+                new_in = BipartiteEdges(
+                    e_in.src[keep_in],
+                    remap[e_in.dst[keep_in]],
+                    e_in.n_src,
+                    int(kept.size),
+                )
+                new_out = BipartiteEdges(
+                    remap[e_out.src[keep_out]],
+                    e_out.dst[keep_out],
+                    int(kept.size),
+                    e_out.n_dst,
+                )
+                new_chains.append(Chain([new_in, new_out]))
+        ds = np.concatenate(direct_s)
+        dd = np.concatenate(direct_d)
+        direct = (
+            BipartiteEdges(ds, dd, self.n_real, self.n_real) if ds.size else None
+        )
+        return CondensedGraph(
+            self.n_real, new_chains, direct, self.node_properties, self.node_type
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"CondensedGraph(n_real={self.n_real}, n_virtual={self.n_virtual}, "
+            f"chains={len(self.chains)}, edges={self.n_edges_condensed})"
+        )
+
+
+def collapse_to_single_layer(
+    graph: CondensedGraph,
+    keep_layer: Optional[int] = None,
+    max_growth: float = 10.0,
+) -> CondensedGraph:
+    """Collapse multi-layer chains to single-layer (paper §5.2.2).
+
+    The paper's prescription for multi-layer dedup: "first converting it
+    into a single-layer graph ... through expansion of all virtual nodes
+    in all but one layer".  For each chain, every level before/after the
+    kept layer is composed into direct (real -> kept) / (kept -> real)
+    incidences; composed pair multiplicities are preserved as repeated
+    edges (C-DUP semantics).  ``keep_layer`` defaults to the layer
+    minimizing the composed edge count; raises if the composition would
+    grow the chain by more than ``max_growth`` (the paper's space-explosion
+    guard).
+    """
+    new_chains: List[Chain] = []
+    for chain in graph.chains:
+        if chain.n_layers == 1:
+            new_chains.append(chain)
+            continue
+        k = chain.n_layers
+        best: Optional[Chain] = None
+        candidates = range(k) if keep_layer is None else [keep_layer]
+        for keep in candidates:
+            # compose levels 0..keep into (real -> kept layer)
+            s, d, m = _compose_chain(chain.edges[: keep + 1])
+            e_in = BipartiteEdges(
+                np.repeat(s, m), np.repeat(d, m),
+                chain.edges[0].n_src, chain.edges[keep].n_dst,
+            )
+            s2, d2, m2 = _compose_chain(chain.edges[keep + 1 :])
+            e_out = BipartiteEdges(
+                np.repeat(s2, m2), np.repeat(d2, m2),
+                chain.edges[keep + 1].n_src, chain.edges[-1].n_dst,
+            )
+            cand = Chain([e_in, e_out])
+            if best is None or cand.n_edges < best.n_edges:
+                best = cand
+        assert best is not None
+        if best.n_edges > max_growth * chain.n_edges:
+            raise ValueError(
+                f"collapse grows chain {chain.n_edges} -> {best.n_edges} "
+                f"edges (> {max_growth}x); keep multi-layer + DEDUP-C instead"
+            )
+        new_chains.append(best)
+    return CondensedGraph(
+        graph.n_real, new_chains, graph.direct,
+        graph.node_properties, graph.node_type,
+    )

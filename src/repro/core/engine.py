@@ -1,0 +1,284 @@
+"""Device-side propagation engine over graph representations.
+
+Implements the paper's ``getNeighbors``-driven execution model as bulk
+semiring propagation (DESIGN.md §2).  One call to :func:`propagate`
+computes, for every vertex at once,
+
+    y[v] = ⊕_{u -> v}  x[u] ⊗ w(u, v)
+
+on any representation:
+
+* ``DeviceExpanded``   — EXP: one segment-reduce over the expanded edges.
+* ``DeviceCondensed``  — C-DUP / DEDUP-1: one segment-reduce per condensed
+  layer (the 2-hop factorized SpMV, ``y = B_out^T (B_in^T x)``); path
+  multiplicity is counted by ring semirings and ignored by idempotent ones.
+* correction structure — DEDUP-C: C-DUP propagation minus a sparse
+  correction term makes ring propagation exact without rewriting edges.
+
+All arrays are JAX; graph containers are registered pytrees so jitted
+algorithms take them as arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .condensed import BipartiteEdges, CondensedGraph, ExpandedGraph
+from .semiring import PLUS_TIMES, Semiring, segment_reduce
+
+__all__ = [
+    "DeviceBipartite",
+    "DeviceExpanded",
+    "DeviceCondensed",
+    "DeviceGraph",
+    "to_device",
+    "propagate",
+]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst"],
+    meta_fields=["n_src", "n_dst"],
+)
+@dataclasses.dataclass
+class DeviceBipartite:
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    n_src: int
+    n_dst: int
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "weight"],
+    meta_fields=["n"],
+)
+@dataclasses.dataclass
+class DeviceExpanded:
+    """EXP: unique edges with multiplicity weights (1 after dedup)."""
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    weight: jnp.ndarray  # float multiplicities; all-ones when deduplicated
+    n: int
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["chains", "direct", "correction", "diag_mult"],
+    meta_fields=["n_real", "deduplicated"],
+)
+@dataclasses.dataclass
+class DeviceCondensed:
+    """C-DUP / DEDUP-1 / DEDUP-C on device.
+
+    ``chains``      list of chains; each chain a tuple of DeviceBipartite.
+    ``direct``      optional real->real edges (may repeat = multiplicity).
+    ``correction``  optional (src, dst, count) triple; when present, ring
+                    propagation subtracts it (DEDUP-C).
+    ``diag_mult``   per-node count of self paths (subtracted by ring
+                    propagation so self-loops never contribute).
+    ``deduplicated``True when path multiplicity is structurally 1
+                    (DEDUP-1 output), so ring propagation is exact as-is.
+    """
+
+    chains: Tuple[Tuple[DeviceBipartite, ...], ...]
+    direct: Optional[DeviceBipartite]
+    correction: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+    diag_mult: Optional[jnp.ndarray]
+    n_real: int
+    deduplicated: bool
+
+
+DeviceGraph = Union[DeviceExpanded, DeviceCondensed]
+
+
+# ---------------------------------------------------------------------------
+# Host -> device conversion
+# ---------------------------------------------------------------------------
+
+def _dev_edges(e: BipartiteEdges) -> DeviceBipartite:
+    return DeviceBipartite(
+        jnp.asarray(e.src, dtype=jnp.int32),
+        jnp.asarray(e.dst, dtype=jnp.int32),
+        e.n_src,
+        e.n_dst,
+    )
+
+
+def self_path_counts(graph: CondensedGraph) -> np.ndarray:
+    """Host: number of closed u->u paths per real node (diagonal of M)."""
+    diag = np.zeros(graph.n_real, dtype=np.int64)
+    for chain in graph.chains:
+        if chain.n_layers == 1:
+            e_in, e_out = chain.edges
+            # Join (u, V) with (V, u): count matching (V, u) occurrences.
+            key_in = e_in.dst.astype(np.int64) * graph.n_real + e_in.src
+            key_out = e_out.src.astype(np.int64) * graph.n_real + e_out.dst
+            key_out_sorted = np.sort(key_out)
+            lo = np.searchsorted(key_out_sorted, key_in, side="left")
+            hi = np.searchsorted(key_out_sorted, key_in, side="right")
+            np.add.at(diag, e_in.src, (hi - lo))
+        else:
+            s, d, m = chain.path_pairs()
+            mask = s == d
+            np.add.at(diag, s[mask], m[mask])
+    if graph.direct is not None and graph.direct.n_edges:
+        mask = graph.direct.src == graph.direct.dst
+        np.add.at(diag, graph.direct.src[mask], 1)
+    return diag
+
+
+def to_device(
+    graph: Union[CondensedGraph, ExpandedGraph],
+    correction: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    deduplicated: bool = False,
+    drop_self_loops: bool = True,
+) -> DeviceGraph:
+    """Build the device representation.
+
+    For ``CondensedGraph`` inputs, pass ``correction`` (from
+    :func:`repro.core.dedup.build_correction`) to get DEDUP-C semantics, or
+    ``deduplicated=True`` for DEDUP-1 output.  Without either, ring
+    propagation counts duplicate paths (C-DUP semantics) — fine for
+    idempotent algorithms, flagged by :func:`propagate` otherwise.
+    """
+    if isinstance(graph, ExpandedGraph):
+        g = graph.without_self_loops() if drop_self_loops else graph
+        return DeviceExpanded(
+            jnp.asarray(g.src, dtype=jnp.int32),
+            jnp.asarray(g.dst, dtype=jnp.int32),
+            jnp.minimum(jnp.asarray(g.multiplicity, dtype=jnp.float32), 1.0),
+            g.n,
+        )
+    chains = tuple(tuple(_dev_edges(e) for e in c.edges) for c in graph.chains)
+    direct = _dev_edges(graph.direct) if graph.direct is not None else None
+    corr = None
+    if correction is not None:
+        cs, cd, cm = correction
+        corr = (
+            jnp.asarray(cs, dtype=jnp.int32),
+            jnp.asarray(cd, dtype=jnp.int32),
+            jnp.asarray(cm, dtype=jnp.float32),
+        )
+    diag = None
+    if drop_self_loops and corr is None:
+        # Full self-path multiplicity: DEDUP-1's uniqueness invariant is
+        # off-diagonal only — u reaches itself once per containing virtual
+        # node, and all of those must be subtracted.
+        diag = jnp.asarray(self_path_counts(graph), dtype=jnp.float32)
+    return DeviceCondensed(
+        chains=chains,
+        direct=direct,
+        correction=corr,
+        diag_mult=diag,
+        n_real=graph.n_real,
+        deduplicated=deduplicated,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Propagation
+# ---------------------------------------------------------------------------
+
+def _gather(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(x, idx, axis=0)
+
+
+def _edge_propagate(
+    sr: Semiring,
+    edges: DeviceBipartite,
+    x: jnp.ndarray,
+    reverse: bool,
+) -> jnp.ndarray:
+    src, dst = (edges.dst, edges.src) if reverse else (edges.src, edges.dst)
+    n_out = edges.n_src if reverse else edges.n_dst
+    return segment_reduce(sr, _gather(x, src), dst, n_out)
+
+
+def _apply_hop(sr: Semiring, y: jnp.ndarray, hop_weight: Optional[float]) -> jnp.ndarray:
+    if hop_weight is None:
+        return y
+    return sr.mul(y, jnp.asarray(hop_weight, dtype=y.dtype))
+
+
+def propagate(
+    graph: DeviceGraph,
+    x: jnp.ndarray,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    reverse: bool = False,
+    hop_weight: Optional[float] = None,
+    allow_duplicates: bool = False,
+) -> jnp.ndarray:
+    """One superstep: ⊕-combine ⊗-weighted messages along all edges.
+
+    ``hop_weight`` is applied once per *logical* (real->real) hop, not per
+    condensed layer, so BFS hop counting matches the expanded graph.
+    """
+    if isinstance(graph, DeviceExpanded):
+        src, dst = (graph.dst, graph.src) if reverse else (graph.src, graph.dst)
+        msgs = _gather(x, src)
+        if semiring.name == "plus_times":
+            msgs = msgs * _bcast(graph.weight, msgs)
+        y = segment_reduce(semiring, msgs, dst, graph.n)
+        return _apply_hop(semiring, y, hop_weight)
+
+    assert isinstance(graph, DeviceCondensed)
+    exact = (
+        semiring.idempotent
+        or graph.deduplicated
+        or graph.correction is not None
+    )
+    if not exact and not allow_duplicates:
+        raise ValueError(
+            "ring propagation on C-DUP counts duplicate paths; pass a "
+            "correction (DEDUP-C), a deduplicated graph (DEDUP-1), or "
+            "allow_duplicates=True (paper §4.1 duplication problem)"
+        )
+
+    y = None
+    for chain in graph.chains:
+        seq: Sequence[DeviceBipartite] = chain[::-1] if reverse else chain
+        h = x
+        for e in seq:
+            h = _edge_propagate(semiring, e, h, reverse)
+        h = _apply_hop(semiring, h, hop_weight)
+        y = h if y is None else semiring.add(y, h)
+    if graph.direct is not None:
+        h = _edge_propagate(semiring, graph.direct, x, reverse)
+        h = _apply_hop(semiring, h, hop_weight)
+        y = h if y is None else semiring.add(y, h)
+    if y is None:
+        zero_shape = (graph.n_real,) + x.shape[1:]
+        y = jnp.full(zero_shape, semiring.zero, dtype=x.dtype)
+
+    if semiring.name == "plus_times":
+        # Exactness corrections only make sense in the ring.
+        if graph.correction is not None:
+            cs, cd, cm = graph.correction
+            src, dst = (cd, cs) if reverse else (cs, cd)
+            corr = jax.ops.segment_sum(
+                _gather(x, src) * _bcast(cm, _gather(x, src)),
+                dst,
+                num_segments=graph.n_real,
+            )
+            y = y - _apply_hop(semiring, corr, hop_weight)
+        elif graph.diag_mult is not None:
+            y = y - _apply_hop(
+                semiring, x * _bcast(graph.diag_mult, x), hop_weight
+            )
+    return y
+
+
+def _bcast(w: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast per-edge/per-node weight against feature matrices."""
+    if like.ndim == w.ndim:
+        return w.astype(like.dtype)
+    return w.astype(like.dtype).reshape(w.shape + (1,) * (like.ndim - w.ndim))

@@ -1,0 +1,107 @@
+"""Semirings for condensed-graph propagation.
+
+The paper distinguishes *duplicate-insensitive* graph algorithms (run
+directly on C-DUP) from *duplicate-sensitive* ones (need dedup).  In
+linear-algebra terms: propagation under an **idempotent** semiring add
+(``min``, ``max``, ``or``) is invariant to path multiplicity, while a ring
+add (``+``) counts paths.  Each algorithm in :mod:`repro.core.algorithms`
+declares its semiring; the engine uses the ``idempotent`` flag to decide
+whether a dedup structure is required for exactness (paper §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Semiring",
+    "PLUS_TIMES",
+    "MIN_PLUS",
+    "MAX_TIMES",
+    "OR_AND",
+    "segment_reduce",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    add_kind: str  # 'sum' | 'min' | 'max'
+    mul: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    zero: float
+    one: float
+    idempotent: bool
+    supports_subtraction: bool = False  # needed by the DEDUP-C correction
+
+    def add(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        if self.add_kind == "sum":
+            return x + y
+        if self.add_kind == "min":
+            return jnp.minimum(x, y)
+        if self.add_kind == "max":
+            return jnp.maximum(x, y)
+        raise ValueError(self.add_kind)
+
+
+PLUS_TIMES = Semiring(
+    name="plus_times",
+    add_kind="sum",
+    mul=jnp.multiply,
+    zero=0.0,
+    one=1.0,
+    idempotent=False,
+    supports_subtraction=True,
+)
+
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add_kind="min",
+    mul=jnp.add,
+    zero=jnp.inf,
+    one=0.0,
+    idempotent=True,
+)
+
+MAX_TIMES = Semiring(
+    name="max_times",
+    add_kind="max",
+    mul=jnp.multiply,
+    zero=0.0,
+    one=1.0,
+    idempotent=True,
+)
+
+# Boolean reachability encoded in {0,1} floats so the same segment kernels
+# apply; `or` == max, `and` == min(x, y) == x*y on {0,1}.
+OR_AND = Semiring(
+    name="or_and",
+    add_kind="max",
+    mul=jnp.minimum,
+    zero=0.0,
+    one=1.0,
+    idempotent=True,
+)
+
+
+def segment_reduce(
+    semiring: Semiring,
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+) -> jnp.ndarray:
+    """⊕-reduce ``values`` by ``segment_ids`` (vector or (n, f) features)."""
+    if semiring.add_kind == "sum":
+        return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+    if semiring.add_kind == "min":
+        out = jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
+        # Empty segments come back as +inf already for min; normalize dtype.
+        return out
+    if semiring.add_kind == "max":
+        out = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+        # Empty segments of segment_max are -inf; semiring zero may differ.
+        return jnp.where(jnp.isneginf(out), semiring.zero, out)
+    raise ValueError(semiring.add_kind)

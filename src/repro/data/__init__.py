@@ -1,0 +1,2 @@
+"""Data substrate: synthetic relational datasets, condensed-graph
+generators (paper App. C), graph samplers, and token pipelines."""

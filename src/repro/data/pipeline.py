@@ -1,0 +1,71 @@
+"""Data pipelines: synthetic corpora + sharded host->device batching.
+
+The LM pipeline generates a Zipf-token synthetic corpus deterministically
+per (seed, shard) so every data-parallel host draws disjoint streams —
+the multi-host contract real pipelines must satisfy.  Batches are placed
+with ``jax.device_put`` against the batch sharding so the train step
+never sees host arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenPipeline", "sasrec_batches", "gnn_batch"]
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    shard_index: int = 0
+    num_shards: int = 1
+    zipf_a: float = 1.3
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.shard_index])
+        )
+        batch = self.global_batch // self.num_shards
+        while True:
+            toks = rng.zipf(self.zipf_a, size=(batch, self.seq_len + 1))
+            toks = (toks - 1) % self.vocab_size
+            # structure: repeat bigrams so the model has signal to learn
+            toks[:, 2::3] = toks[:, 1:-1:3]
+            yield {
+                "tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32),
+            }
+
+    def device_iter(self, sharding=None) -> Iterator[Dict[str, jnp.ndarray]]:
+        for batch in self:
+            if sharding is None:
+                yield {k: jnp.asarray(v) for k, v in batch.items()}
+            else:
+                yield {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+def sasrec_batches(
+    n_items: int, seq_len: int, batch: int, seed: int = 0
+) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    while True:
+        seqs = rng.integers(1, n_items, size=(batch, seq_len), dtype=np.int64)
+        pos = np.roll(seqs, -1, axis=1)
+        pos[:, -1] = rng.integers(1, n_items, size=batch)
+        neg = rng.integers(1, n_items, size=(batch, seq_len), dtype=np.int64)
+        yield {
+            "seqs": seqs.astype(np.int32),
+            "pos": pos.astype(np.int32),
+            "neg": neg.astype(np.int32),
+        }
+
+
+def gnn_batch(graph, target: np.ndarray) -> Dict:
+    return {"graph": graph, "target": jnp.asarray(target)}

@@ -1,0 +1,132 @@
+"""Logical-axis sharding (MaxText-style rules, framework-local).
+
+Models annotate tensors with *logical* axis names ("batch", "heads", ...).
+A rules mapping (per arch config) resolves logical names to mesh axes.
+Outside any mesh context the annotations are no-ops, so the same model
+code runs in CPU smoke tests and 512-chip dry-runs.
+
+Usage::
+
+    with use_mesh_rules(mesh, cfg.sharding_rules):
+        y = jax.jit(step, in_shardings=..., out_shardings=...)(...)
+
+    # inside model code
+    x = shard(x, "batch", "seq", "embed")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "use_mesh_rules",
+    "shard",
+    "logical_spec",
+    "named_sharding",
+    "specs_for_tree",
+    "current_mesh",
+]
+
+_state = threading.local()
+
+
+def _ctx() -> Tuple[Optional[Mesh], Optional[Mapping]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[Mapping]):
+    old = _ctx()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx()[0]
+
+
+def _resolve(axis: Optional[str], rules: Mapping, mesh: Mesh):
+    """Logical axis -> mesh axis (or tuple), filtered to existing axes."""
+    if axis is None:
+        return None
+    target = rules.get(axis, None)
+    if target is None:
+        return None
+    if isinstance(target, (tuple, list)):
+        present = tuple(t for t in target if t in mesh.axis_names)
+        return present if present else None
+    return target if target in mesh.axis_names else None
+
+
+def logical_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[Mapping] = None,
+    mesh: Optional[Mesh] = None,
+) -> PartitionSpec:
+    m, r = _ctx()
+    mesh = mesh or m
+    rules = rules or r
+    if mesh is None or rules is None:
+        return PartitionSpec()
+    return PartitionSpec(*[_resolve(a, rules, mesh) for a in logical_axes])
+
+
+def named_sharding(
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[Mapping] = None,
+    mesh: Optional[Mesh] = None,
+) -> Optional[NamedSharding]:
+    m, r = _ctx()
+    mesh = mesh or m
+    rules = rules or r
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, logical_spec(logical_axes, rules, mesh))
+
+
+def _dedup_axes(spec: PartitionSpec) -> PartitionSpec:
+    """Drop later duplicate mesh-axis uses (keep-first priority): lets
+    model code annotate e.g. ("batch", "act_seq", "vocab") and stay legal
+    when an arch maps act_seq and vocab to the same mesh axis (SP)."""
+    seen = set()
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in seen)
+        seen.update(kept)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return PartitionSpec(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active (else no-op)."""
+    mesh, rules = _ctx()
+    if mesh is None or rules is None or len(mesh.devices.flatten()) == 1:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"rank {x.ndim} tensor got {len(logical_axes)} logical axes"
+        )
+    spec = _dedup_axes(logical_spec(logical_axes, rules, mesh))
+    ns = NamedSharding(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def specs_for_tree(axes_tree, rules: Mapping, mesh: Mesh):
+    """Pytree of logical-axis tuples -> pytree of NamedSharding."""
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(mesh, logical_spec(axes, rules, mesh)),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(a, str) or a is None for a in v),
+    )

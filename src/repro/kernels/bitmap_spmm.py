@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: bit-packed block-sparse SpMM (the condensed hot loop).
+
+Computes ``y = B @ x`` where ``B`` is the 0/1 incidence of one condensed
+layer, stored as block-ELL bitmaps (:mod:`repro.kernels.pack`).  Two calls
+realize the paper's 2-hop condensed propagation ``y = B_out (B_in^T x)``
+without ever materializing the expanded adjacency.
+
+TPU mapping (see DESIGN.md §6):
+
+* grid = (dst row-tiles, feature tiles); each cell owns a (128, Fb) output
+  tile in VMEM — MXU-aligned.
+* the k-loop walks that row-tile's nonzero source blocks; bitmaps
+  (128 x 4 uint32 = 2 KiB) are unpacked in-register into a dense 128x128
+  0/1 MXU operand — 32x less HBM traffic than an f32 block.
+* the source feature column (n_src_pad, Fb) resides in VMEM; source tiles
+  are fetched with dynamic slices (``pl.ds``) indexed by the block table
+  (data-dependent gather at tile granularity — TPU-friendly).
+
+VMEM budget per grid cell ~= n_src_pad*Fb*4 + max_k*2KiB + 2*128*Fb*4;
+``ops.bitmap_spmm`` falls back to the XLA segment-sum path when the
+source column exceeds the VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pack import TILE, WORDS
+
+__all__ = ["bitmap_spmm_pallas"]
+
+
+def _kernel(blocks_ref, bitmaps_ref, x_ref, y_ref, *, max_k: int):
+    """One (row-tile, feature-tile) output block."""
+    fb = y_ref.shape[-1]
+
+    def body(k, acc):
+        b = blocks_ref[0, k]
+        xb = x_ref[pl.ds(b * TILE, TILE), :]  # (T, Fb) dynamic tile gather
+        words = bitmaps_ref[0, k]  # (T, WORDS) uint32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (TILE, WORDS, 32), 2)
+        bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+        mask = bits.reshape(TILE, TILE).astype(xb.dtype)
+        return acc + jnp.dot(mask, xb, preferred_element_type=jnp.float32)
+
+    acc = jnp.zeros((TILE, fb), dtype=jnp.float32)
+    acc = jax.lax.fori_loop(0, max_k, body, acc)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_dst_pad", "feature_block", "interpret")
+)
+def bitmap_spmm_pallas(
+    blocks: jnp.ndarray,     # (n_rt, max_k) int32
+    bitmaps: jnp.ndarray,    # (n_rt, max_k, TILE, WORDS) uint32
+    x: jnp.ndarray,          # (n_src_pad, F) — n_src_pad, F multiples of TILE granularity
+    n_dst_pad: int,
+    feature_block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n_rt, max_k = blocks.shape
+    n_src_pad, f = x.shape
+    if n_dst_pad % TILE or f % feature_block or n_src_pad % TILE:
+        raise ValueError(
+            f"padded dims required: n_dst_pad={n_dst_pad}, f={f}, "
+            f"n_src_pad={n_src_pad} (TILE={TILE}, fb={feature_block})"
+        )
+    grid = (n_rt, f // feature_block)
+    return pl.pallas_call(
+        functools.partial(_kernel, max_k=max_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, max_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, max_k, TILE, WORDS), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((n_src_pad, feature_block), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, feature_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_dst_pad, f), x.dtype),
+        interpret=interpret,
+    )(blocks, bitmaps, x)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels with XLA fallback.
+
+``bitmap_spmm``       one condensed layer:  y = B @ x
+``condensed_two_hop`` the paper's hot loop: y = B_out @ (B_in @ x)
+
+Backend selection: ``backend='pallas'`` uses the bit-packed MXU kernel
+(interpret mode on CPU, compiled on TPU); ``'xla'`` uses the
+gather/segment-sum path; ``'auto'`` picks pallas when the source feature
+column fits the VMEM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.condensed import BipartiteEdges
+from .bitmap_spmm import bitmap_spmm_pallas
+from .pack import TILE, BlockSparseBitmap, pack_bipartite
+from .ref import segment_spmm_ref
+
+__all__ = ["PackedLayer", "pack_layer", "bitmap_spmm", "condensed_two_hop"]
+
+# VMEM budget for the in-kernel source column (bytes); half of a v5e's
+# 128 MiB VMEM? No — v5e VMEM is ~128KiB*... practical budget: 8 MiB.
+_VMEM_COLUMN_BUDGET = 8 * 2**20
+
+
+@dataclasses.dataclass
+class PackedLayer:
+    """Both kernel operands for one bipartite layer."""
+
+    bsb: BlockSparseBitmap
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    n_src: int
+    n_dst: int
+
+    @classmethod
+    def from_edges(cls, edges: BipartiteEdges) -> "PackedLayer":
+        return cls(
+            bsb=pack_bipartite(edges),
+            src=jnp.asarray(edges.src, dtype=jnp.int32),
+            dst=jnp.asarray(edges.dst, dtype=jnp.int32),
+            n_src=edges.n_src,
+            n_dst=edges.n_dst,
+        )
+
+
+def pack_layer(edges: BipartiteEdges) -> PackedLayer:
+    return PackedLayer.from_edges(edges)
+
+
+def _pad_rows(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    pad = n - x.shape[0]
+    return x if pad == 0 else jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def _pad_cols(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    pad = m - x.shape[1]
+    return x if pad == 0 else jnp.pad(x, ((0, 0), (0, pad)))
+
+
+def bitmap_spmm(
+    layer: PackedLayer,
+    x: jnp.ndarray,
+    backend: str = "auto",
+    feature_block: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y[dst] = sum over edges of x[src]; x may be (n_src,) or (n_src, F)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    n_src_pad = -(-layer.n_src // TILE) * TILE
+    f_pad = -(-x.shape[1] // feature_block) * feature_block
+    if backend == "auto":
+        fits = n_src_pad * f_pad * x.dtype.itemsize <= _VMEM_COLUMN_BUDGET
+        backend = "pallas" if fits else "xla"
+    if backend == "xla":
+        y = segment_spmm_ref(layer.src, layer.dst, x, layer.n_dst)
+    elif backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        xp = _pad_cols(_pad_rows(x, n_src_pad), f_pad)
+        n_dst_pad = layer.bsb.n_row_tiles * TILE
+        yp = bitmap_spmm_pallas(
+            jnp.asarray(layer.bsb.blocks),
+            jnp.asarray(layer.bsb.bitmaps),
+            xp,
+            n_dst_pad=n_dst_pad,
+            feature_block=feature_block,
+            interpret=interpret,
+        )
+        y = yp[: layer.n_dst, : x.shape[1]]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return y[:, 0] if squeeze else y
+
+
+def condensed_two_hop(
+    layer_in: PackedLayer,
+    layer_out: PackedLayer,
+    x: jnp.ndarray,
+    backend: str = "auto",
+    feature_block: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """The condensed hot loop: y = B_out @ (B_in @ x) (plus-times)."""
+    h = bitmap_spmm(layer_in, x, backend, feature_block, interpret)
+    return bitmap_spmm(layer_out, h, backend, feature_block, interpret)

@@ -1,0 +1,118 @@
+"""Host-side packing: BipartiteEdges -> bit-packed block-sparse incidence.
+
+The paper's BITMAP idea (per-virtual-node bitmaps consulted during
+traversal) reborn TPU-native: the 0/1 incidence matrix of a condensed
+layer is tiled into 128x128 blocks; only nonzero blocks are stored, each
+as a 128x4 uint32 bitmap (2 KiB instead of 64 KiB f32).  The Pallas kernel
+unpacks a block's bits in VMEM and feeds the MXU with a dense 128x128
+operand — bandwidth-compressed SpMM (see DESIGN.md §6).
+
+Layout (block-ELL):
+    blocks  : (n_row_tiles, max_k) int32   — source-tile index per slot
+    bitmaps : (n_row_tiles, max_k, TILE, TILE//32) uint32
+    nnz slots are left-justified; padding slots have block id 0 and
+    all-zero bitmaps (mathematically inert).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from ..core.condensed import BipartiteEdges
+
+TILE = 128
+WORDS = TILE // 32
+
+__all__ = ["BlockSparseBitmap", "pack_bipartite", "TILE", "WORDS"]
+
+
+@dataclasses.dataclass
+class BlockSparseBitmap:
+    """Destination-major packed incidence: rows = dst, cols = src."""
+
+    blocks: np.ndarray     # (n_row_tiles, max_k) int32
+    bitmaps: np.ndarray    # (n_row_tiles, max_k, TILE, WORDS) uint32
+    n_dst: int             # logical rows
+    n_src: int             # logical cols
+
+    @property
+    def n_row_tiles(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def max_k(self) -> int:
+        return int(self.blocks.shape[1])
+
+    @property
+    def n_src_tiles(self) -> int:
+        return -(-self.n_src // TILE)
+
+    @property
+    def n_nonzero_blocks(self) -> int:
+        return int((self.bitmaps.any(axis=(2, 3))).sum())
+
+    def nbytes(self) -> int:
+        return int(self.blocks.nbytes + self.bitmaps.nbytes)
+
+    def to_dense(self) -> np.ndarray:
+        """Oracle helper: dense (n_dst_pad, n_src_pad) 0/1 matrix."""
+        n_rt, mk = self.blocks.shape
+        dense = np.zeros((n_rt * TILE, self.n_src_tiles * TILE), dtype=np.float32)
+        shifts = np.arange(32, dtype=np.uint32)
+        for i in range(n_rt):
+            for k in range(mk):
+                w = self.bitmaps[i, k]
+                if not w.any():
+                    continue
+                bits = ((w[:, :, None] >> shifts) & 1).reshape(TILE, TILE)
+                b = int(self.blocks[i, k])
+                dense[i * TILE : (i + 1) * TILE, b * TILE : (b + 1) * TILE] += bits
+        return dense
+
+
+def pack_bipartite(edges: BipartiteEdges) -> BlockSparseBitmap:
+    """Pack dst-major: y[dst] += x[src]  ==  y = B @ x with B[dst, src]=1.
+
+    Duplicate (src, dst) pairs are rejected — a bitmap holds one bit per
+    cell (condensed incidence layers are duplicate-free by construction;
+    multiplicity lives across *paths*, not within a layer).
+    """
+    src = edges.src
+    dst = edges.dst
+    key = dst.astype(np.int64) * edges.n_src + src
+    if np.unique(key).size != key.size:
+        raise ValueError("pack_bipartite requires duplicate-free edges")
+
+    n_rt = -(-edges.n_dst // TILE)
+    bd = dst // TILE
+    bs = src // TILE
+    # unique (row_tile, src_tile) blocks
+    bkey = bd.astype(np.int64) * (edges.n_src // TILE + 1) + bs
+    uniq, inv = np.unique(bkey, return_inverse=True)
+    ub_rows = (uniq // (edges.n_src // TILE + 1)).astype(np.int64)
+    ub_cols = (uniq % (edges.n_src // TILE + 1)).astype(np.int64)
+    # slot within row tile: rank of block among its row's blocks
+    counts = np.bincount(ub_rows, minlength=n_rt)
+    max_k = max(int(counts.max()) if counts.size else 0, 1)
+    slot_of_block = np.zeros(uniq.size, dtype=np.int64)
+    # uniq sorted => blocks grouped by row already
+    row_starts = np.searchsorted(ub_rows, np.arange(n_rt))
+    slot_of_block = np.arange(uniq.size) - row_starts[ub_rows]
+
+    blocks = np.zeros((n_rt, max_k), dtype=np.int32)
+    blocks[ub_rows, slot_of_block] = ub_cols.astype(np.int32)
+    bitmaps = np.zeros((n_rt, max_k, TILE, WORDS), dtype=np.uint32)
+    r = (dst % TILE).astype(np.int64)
+    c = (src % TILE).astype(np.int64)
+    word = c // 32
+    bit = (c % 32).astype(np.uint32)
+    np.bitwise_or.at(
+        bitmaps,
+        (ub_rows[inv], slot_of_block[inv], r, word),
+        (np.uint32(1) << bit),
+    )
+    return BlockSparseBitmap(
+        blocks=blocks, bitmaps=bitmaps, n_dst=edges.n_dst, n_src=edges.n_src
+    )

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the kernels package (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pack import TILE, WORDS, BlockSparseBitmap
+
+__all__ = ["bitmap_spmm_ref", "segment_spmm_ref", "two_hop_ref"]
+
+
+def bitmap_spmm_ref(bsb: BlockSparseBitmap, x: np.ndarray) -> np.ndarray:
+    """Dense oracle: unpack every block and matmul (small inputs only)."""
+    dense = bsb.to_dense()
+    n_src_pad = dense.shape[1]
+    xp = np.zeros((n_src_pad, x.shape[1]), dtype=np.float64)
+    xp[: x.shape[0]] = x
+    return (dense.astype(np.float64) @ xp)[: bsb.n_dst]
+
+
+def segment_spmm_ref(
+    src: jnp.ndarray, dst: jnp.ndarray, x: jnp.ndarray, n_dst: int
+) -> jnp.ndarray:
+    """Edge-list oracle: y[dst] += x[src] via segment_sum (XLA path)."""
+    return jax.ops.segment_sum(jnp.take(x, src, axis=0), dst, num_segments=n_dst)
+
+
+def two_hop_ref(
+    in_src: jnp.ndarray,
+    in_dst: jnp.ndarray,
+    n_virtual: int,
+    out_src: jnp.ndarray,
+    out_dst: jnp.ndarray,
+    n_real: int,
+    x: jnp.ndarray,
+) -> jnp.ndarray:
+    """Condensed 2-hop oracle: y = B_out (B_in x)."""
+    h = segment_spmm_ref(in_src, in_dst, x, n_virtual)
+    return segment_spmm_ref(out_src, out_dst, h, n_real)

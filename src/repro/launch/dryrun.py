@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/roofline artifacts.
+
+MUST be run as its own process (the two lines above must execute before
+any jax import anywhere): ``PYTHONPATH=src python -m repro.launch.dryrun
+--arch glm4-9b --shape train_4k --mesh single`` or ``--all``.
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>.json`` and are
+consumed by EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from . import cells as cells_lib
+from . import roofline as rl
+from .mesh import make_production_mesh
+from ..configs import registry
+from ..distributed.sharding import use_mesh_rules
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, verbose: bool = True,
+             variant=None) -> dict:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = len(mesh.devices.flatten())
+    cell = cells_lib.build_cell(arch, shape, mesh, variant=variant)
+    t0 = time.time()
+    with use_mesh_rules(mesh, cell.rules):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes_per_device": mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes,
+    }
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_name}] lower {t_lower:.1f}s "
+              f"compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis: flops/device = %.3e, bytes/device = %.3e"
+              % (cost.get("flops", 0), cost.get("bytes accessed", 0)))
+    hlo = compiled.as_text()
+    report = rl.roofline_terms(
+        arch, shape, mesh_name, n_chips, cost, hlo, mem_stats,
+        rl.model_flops(arch, shape),
+    )
+    rec = report.to_json()
+    rec.update({
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "ok": True,
+    })
+    if verbose:
+        print(f"  roofline: compute {report.compute_s*1e3:.3f}ms | memory "
+              f"{report.memory_s*1e3:.3f}ms | collective {report.collective_s*1e3:.3f}ms "
+              f"-> dominant: {report.dominant}; useful_flops_ratio "
+              f"{report.useful_ratio:.3f}")
+    return rec
+
+
+def save(rec: dict, arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see configs.registry)")
+    ap.add_argument("--shape", help="input-shape name for the arch family")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all 40 assigned cells")
+    ap.add_argument("--include-paper", action="store_true",
+                    help="also run the graphgen-paper analytics cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="optimization variant (e.g. a2a); result files get a suffix")
+    args = ap.parse_args()
+
+    targets = []
+    if args.all:
+        targets = cells_lib.all_cells()
+        if args.include_paper:
+            targets.append(("graphgen-paper", "pagerank"))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        targets = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch, shape in targets:
+        for mesh_name in meshes:
+            tag0 = mesh_name if not args.variant else f"{mesh_name}__{args.variant}"
+            out = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{tag0}.json")
+            if args.skip_existing and os.path.exists(out):
+                with open(out) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[skip] {arch} x {shape} x {mesh_name}")
+                        continue
+            try:
+                rec = run_cell(arch, shape, mesh_name, variant=args.variant)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "arch": arch, "shape": shape, "mesh": mesh_name}
+                failures.append((arch, shape, mesh_name))
+            tag = mesh_name if not args.variant else f"{mesh_name}__{args.variant}"
+            save(rec, arch, shape, tag)
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("all dry-run cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

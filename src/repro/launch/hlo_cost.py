@@ -1,0 +1,475 @@
+"""Loop-aware HLO cost analysis (flops / HBM bytes / collective bytes).
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once* —
+useless for scan-over-layers / gradient-accumulation programs where
+>97% of work lives inside loops (verified empirically; see
+EXPERIMENTS.md §Roofline methodology).  This module walks the compiled
+HLO text with a real call graph:
+
+* ``while`` bodies are multiplied by their trip count, recovered from the
+  loop condition's integer constant (jax scan/fori conditions are
+  ``lt(counter, CONST)``; dynamic bounds fall back to 1 with a warning);
+* ``fusion``/``call`` instructions recurse into their called computation
+  for FLOPs; HBM bytes are counted at fusion *boundaries* (operands +
+  results — fusion internals live in registers/VMEM, which makes this a
+  closer HBM-traffic model than XLA's per-op "bytes accessed");
+* ``dot`` FLOPs = 2 x batch x M x N x K from dot_dimension_numbers;
+  elementwise ops count one FLOP per output element;
+* collective operand bytes are split ICI vs cross-pod DCI by decoding
+  ``replica_groups`` (iota and explicit formats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "token": 0, "s2": 1, "u2": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "opt-barrier",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elements(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    ici_bytes: float = 0.0
+    dci_bytes: float = 0.0
+    n_collectives: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k, self.bytes * k, self.ici_bytes * k,
+            self.dci_bytes * k, self.n_collectives * k,
+            {o: b * k for o, b in self.by_collective.items()},
+            list(self.warnings),
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.ici_bytes += other.ici_bytes
+        self.dci_bytes += other.dci_bytes
+        self.n_collectives += other.n_collectives
+        for o, b in other.by_collective.items():
+            self.by_collective[o] = self.by_collective.get(o, 0.0) + b
+        for w in other.warnings:
+            if w not in self.warnings:
+                self.warnings.append(w)
+
+
+def _split_instr(line: str) -> Optional[Instr]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    m = re.match(r"^%?([\w.\-]+)\s*=\s*(.*)$", line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # type: either a tuple type "(...)" or "dtype[dims]{layout}"
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                type_str, rest = rhs[: i + 1], rhs[i + 1 :].strip()
+                break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1 :]
+    om = re.match(r"^([\w\-]+)\(", rest)
+    if not om:
+        return None
+    op = om.group(1)
+    depth = 0
+    start = om.end() - 1
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            operand_str = rest[start + 1 : i]
+            attrs = rest[i + 1 :]
+            break
+    else:
+        return None
+    operands = re.findall(r"%([\w.\-]+)", operand_str)
+    return Instr(name, type_str, op, operands, attrs)
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        ins = _split_instr(line)
+        if ins is not None:
+            comps[current].append(ins)
+    return comps, entry
+
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def _decode_groups(attrs: str) -> Optional[np.ndarray]:
+    m = _IOTA_RE.search(attrs)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return ids.reshape(g, s)
+    m = re.search(r"replica_groups=\{(.*?)\}\}", attrs)
+    if m:
+        rows = [
+            [int(x) for x in grp.replace(" ", "").split(",") if x]
+            for grp in re.findall(r"\{([\d, ]*)\}", m.group(1) + "}")
+            if grp.strip()
+        ]
+        if rows:
+            width = max(len(r) for r in rows)
+            return np.array([r + r[-1:] * (width - len(r)) for r in rows])
+    return None
+
+
+def _dot_flops(ins: Instr, table: Dict[str, str]) -> float:
+    lhs_t = table.get(ins.operands[0], "")
+    rhs_t = table.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+    _, lhs = _shape_dims(lhs_t)
+    _, rhs = _shape_dims(rhs_t)
+    if not lhs or not rhs:
+        return 2.0 * _elements(ins.type_str)  # fallback
+
+    def dims_of(key):
+        m = re.search(key + r"=\{([\d,]*)\}", ins.attrs)
+        return [int(d) for d in m.group(1).split(",")] if m and m.group(1) else []
+
+    rc = dims_of("rhs_contracting_dims")
+    rb = dims_of("rhs_batch_dims")
+    n_free_rhs = 1
+    for i, d in enumerate(rhs):
+        if i not in rc and i not in rb:
+            n_free_rhs *= d
+    lhs_prod = 1
+    for d in lhs:
+        lhs_prod *= d
+    return 2.0 * lhs_prod * n_free_rhs
+
+
+def analyze_hlo(text: str, pod_size: int = 256, debug: bool = False) -> HloCost:
+    comps, entry = _parse_computations(text)
+    debug_log: List[str] = []
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+        if entry is None:
+            return HloCost(warnings=["no computations parsed"])
+
+    # integer constants per computation (for while trip counts)
+    cond_consts: Dict[str, List[int]] = {c: [] for c in comps}
+    current = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m:
+            current = m.group(2)
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            cm = re.search(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)", line)
+            if cm:
+                cond_consts[current].append(int(cm.group(1)))
+
+    tables: Dict[str, Dict[str, str]] = {
+        cname: {i.name: i.type_str for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    # producer map per computation (for collective dtype normalization)
+    _producers: Dict[str, Dict[str, Instr]] = {
+        cname: {i.name: i for i in instrs} for cname, instrs in comps.items()
+    }
+
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def called_comp(ins: Instr) -> Optional[str]:
+        m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        if m:
+            return m.group(1)
+        return None
+
+    # Sliced-read ops: true HBM traffic is the slice, not the (possibly
+    # layer-stacked) full operand — critical for scan-over-layers programs
+    # where stacked weights are dynamic-sliced every iteration.
+    _SLICING = {"dynamic-slice", "slice", "gather"}
+
+    def _effective_operand_bytes(ins: Instr, table: Dict[str, str]) -> float:
+        op = ins.op
+        if op in _SLICING:
+            return float(_type_bytes(ins.type_str))  # read == result size
+        if op == "dynamic-update-slice":
+            upd = table.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+            return float(_type_bytes(upd))           # read update only
+        if op == "scatter":
+            upd = table.get(ins.operands[-1], "") if ins.operands else ""
+            return 2.0 * _type_bytes(upd)
+        if op == "broadcast":
+            return float(_type_bytes(table.get(ins.operands[0], ""))) if ins.operands else 0.0
+        if op == "copy":
+            # loop-boundary aliasing copies are elided by buffer donation
+            # on TPU; count the write side only (1x, not read+write)
+            return 0.0
+        return float(sum(_type_bytes(table.get(o, "")) for o in ins.operands))
+
+    # Per-fusion-parameter effective bytes: if a fusion parameter is
+    # consumed only by slicing ops inside the callee, the fusion reads the
+    # slices, not the whole array (the scan weight-stack pattern).
+    _fusion_param_cache: Dict[str, Dict[int, Optional[float]]] = {}
+
+    def _fusion_param_bytes(callee: str) -> Dict[int, Optional[float]]:
+        if callee in _fusion_param_cache:
+            return _fusion_param_cache[callee]
+        instrs = comps.get(callee, [])
+        params: Dict[str, int] = {}
+        for sub in instrs:
+            if sub.op == "parameter":
+                m = re.match(r"^(\d+)", sub.attrs.strip(", ")) if sub.attrs else None
+                idx = int(m.group(1)) if m else len(params)
+                # parameter(N): N sits in the operand parens, recover it
+                params[sub.name] = idx
+        # parameter index lives inside the parens: parameter(0) — our
+        # parser put it nowhere, so re-derive by order of appearance.
+        ordered = [s.name for s in instrs if s.op == "parameter"]
+        params = {n: i for i, n in enumerate(ordered)}
+        uses: Dict[str, List[Instr]] = {n: [] for n in params}
+        for sub in instrs:
+            for o in sub.operands:
+                if o in uses:
+                    uses[o].append(sub)
+        out: Dict[int, Optional[float]] = {}
+        for pname, idx in params.items():
+            us = uses[pname]
+            if us and all(
+                u.op in _SLICING and u.operands and u.operands[0] == pname
+                for u in us
+            ):
+                out[idx] = float(sum(_type_bytes(u.type_str) for u in us))
+            else:
+                out[idx] = None  # full operand
+        _fusion_param_cache[callee] = out
+        return out
+
+    def while_parts(ins: Instr) -> Tuple[Optional[str], Optional[str]]:
+        cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+        bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+        return (cm.group(1) if cm else None, bm.group(1) if bm else None)
+
+    def comp_cost(name: str, count_bytes: bool) -> HloCost:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # cycle guard
+        total = HloCost()
+        table = tables.get(name, {})
+        for ins in comps.get(name, []):
+            op = ins.op
+            if op == "while":
+                cond, body = while_parts(ins)
+                trips = 1.0
+                if cond is not None:
+                    consts = cond_consts.get(cond, [])
+                    # also look one level into fusions called by the cond
+                    for sub in comps.get(cond, []):
+                        cc = called_comp(sub)
+                        if cc:
+                            consts = consts + cond_consts.get(cc, [])
+                    if consts:
+                        trips = float(max(consts))
+                    else:
+                        total.warnings.append(f"dynamic trip count in {name}")
+                if body is not None:
+                    bc = comp_cost(body, count_bytes)
+                    if debug:
+                        debug_log.append(
+                            f"while body={body} trips={trips:.0f} "
+                            f"flops={bc.flops:.3e} bytes={bc.bytes:.3e}"
+                        )
+                    total.add(bc.scaled(trips))
+                if cond is not None:
+                    total.add(comp_cost(cond, False).scaled(trips))
+                continue
+            if op in ("fusion", "call", "async-start"):
+                callee = called_comp(ins)
+                if callee:
+                    inner = comp_cost(callee, False)
+                    total.flops += inner.flops
+                    total.ici_bytes += inner.ici_bytes
+                    total.dci_bytes += inner.dci_bytes
+                    total.n_collectives += inner.n_collectives
+                    for o, b in inner.by_collective.items():
+                        total.by_collective[o] = total.by_collective.get(o, 0) + b
+                if count_bytes:
+                    nbytes = float(_type_bytes(ins.type_str))
+                    pb = _fusion_param_bytes(callee) if callee else {}
+                    for i, o in enumerate(ins.operands):
+                        eff = pb.get(i)
+                        nbytes += (
+                            eff if eff is not None
+                            else _type_bytes(table.get(o, ""))
+                        )
+                    total.bytes += nbytes
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%?([\w.\-]+)", ins.attrs):
+                    total.add(comp_cost(m.group(1), count_bytes))
+                continue
+            if op in _COLLECTIVES:
+                nbytes = 0
+                for o in ins.operands:
+                    b = _type_bytes(table.get(o, ""))
+                    # CPU float-normalization: a collective whose operand
+                    # was upcast bf16->f32 moves bf16 on TPU — halve it.
+                    prod = _producers.get(name, {}).get(o)
+                    if (
+                        prod is not None
+                        and prod.op == "convert"
+                        and table.get(o, "").startswith("f32")
+                        and prod.operands
+                        and table.get(prod.operands[0], "").startswith("bf16")
+                    ):
+                        b //= 2
+                    nbytes += b
+                if nbytes == 0:
+                    nbytes = _type_bytes(ins.type_str)
+                groups = _decode_groups(ins.attrs)
+                crosses = False
+                if groups is not None and groups.size:
+                    crosses = bool(
+                        ((groups // pod_size).max(axis=1)
+                         != (groups // pod_size).min(axis=1)).any()
+                    )
+                if crosses:
+                    total.dci_bytes += nbytes
+                else:
+                    total.ici_bytes += nbytes
+                total.n_collectives += 1
+                base = op.replace("-start", "")
+                total.by_collective[base] = total.by_collective.get(base, 0) + nbytes
+                if count_bytes:
+                    total.bytes += nbytes + _type_bytes(ins.type_str)
+                continue
+            # ordinary instruction
+            if op == "convert":
+                # CPU float-normalization artifact: XLA:CPU upcasts bf16
+                # compute to f32, inserting convert round-trips that do not
+                # exist on TPU (native bf16).  Costed at zero; the residual
+                # f32 fusion-boundary buffers still count (documented as a
+                # <=2x pessimism for bf16-heavy cells in EXPERIMENTS.md).
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(ins, table)
+            elif op == "convolution":
+                total.flops += 2.0 * _elements(ins.type_str)
+                total.warnings.append("convolution flops underestimated")
+            elif op not in _SKIP_BYTES_OPS:
+                total.flops += float(_elements(ins.type_str))
+            if count_bytes and op not in _SKIP_BYTES_OPS and op != "fusion":
+                if op == "dynamic-update-slice" and len(ins.operands) > 1:
+                    res_bytes = float(
+                        _type_bytes(table.get(ins.operands[1], ""))
+                    )  # writes only the updated slice (buffer is aliased)
+                else:
+                    res_bytes = float(_type_bytes(ins.type_str))
+                total.bytes += res_bytes + _effective_operand_bytes(ins, table)
+        memo[key] = total
+        return total
+
+    result = comp_cost(entry, True)
+    if debug:
+        result.warnings.extend(debug_log)
+    return result

@@ -1,0 +1,57 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch JAX device state — smoke tests see 1 CPU device;
+only dryrun.py forces 512 host devices via XLA_FLAGS before any import.
+
+Topology: TPU v5e pods of 256 chips in a 16x16 ICI torus; the multi-pod
+mesh adds a leading "pod" axis over the (slower) DCI links.  The sharding
+rules put only data-parallel traffic (one gradient reduce-scatter per
+step, further thinned by gradient accumulation and optional int8
+compression) on the pod axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_host_mesh", "largest_feasible_mesh"]
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 4.5e10                # ~45 GB/s per link direction, 50 quoted
+DCI_BW = 2.5e10                # cross-pod (data-center interconnect), est.
+HBM_BYTES = 16 * 2**30         # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """(16, 16) single pod or (2, 16, 16) two pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever this host actually has (smoke tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def largest_feasible_mesh(
+    n_devices: int, model_parallel: int = 16
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Elastic re-mesh after failures: the largest (data, model) grid that
+    fits the surviving device count, shrinking data parallelism first
+    (orchestrator contract: model-parallel groups are the survival unit).
+    """
+    if n_devices < 1:
+        raise ValueError("no surviving devices to re-mesh")
+    model = min(model_parallel, n_devices)
+    while n_devices % model:
+        model -= 1
+    data = n_devices // model
+    return (data, model), ("data", "model")

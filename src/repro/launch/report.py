@@ -1,0 +1,115 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+def load_all() -> List[Dict]:
+    out = []
+    if not os.path.isdir(RESULTS_DIR):
+        return out
+    for f in sorted(os.listdir(RESULTS_DIR)):
+        if f.endswith(".json"):
+            with open(os.path.join(RESULTS_DIR, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | chips | peak HBM/chip | flops/chip | ICI B/chip | DCI B/chip | lower+compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        peak = r["memory_stats"]["peak_bytes_per_device"]
+        rows.append(
+            "| {arch} | {shape} | {chips} | {peak} | {fl:.2e} | {ici} | {dci} | {t:.0f} |".format(
+                arch=r["arch"], shape=r["shape"], chips=r["n_chips"],
+                peak=fmt_bytes(peak), fl=r["flops_per_device"],
+                ici=fmt_bytes(r["ici_bytes"]), dci=fmt_bytes(r["dci_bytes"]),
+                t=r.get("lower_s", 0) + r.get("compile_s", 0),
+            )
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        rows.append(
+            "| {arch} | {shape} | {c:.4f} | {m:.4f} | {k:.4f} | **{dom}** | {mf:.2e} | {ur:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], c=r["compute_s"],
+                m=r["memory_s"], k=r["collective_s"], dom=r["dominant"],
+                mf=r["model_flops"], ur=r["useful_ratio"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines = [
+        f"cells passed: {len(ok)}; failed: {len(fail)}",
+        f"dominant-term distribution: {doms}",
+    ]
+    for r in fail:
+        lines.append(f"  FAILED {r.get('arch')}x{r.get('shape')}x{r.get('mesh')}: {r.get('error','')[:80]}")
+    return "\n".join(lines)
+
+
+def render(mesh: str) -> str:
+    recs = load_all()
+    return "\n".join([
+        "## Summary", "", summary(recs), "",
+        f"## Dry-run ({mesh} mesh)", "", dryrun_table(recs, mesh), "",
+        f"## Roofline ({mesh} mesh)", "", roofline_table(recs, mesh), "",
+    ])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--emit", action="store_true",
+                    help="write results/tables_<mesh>.md as well")
+    args = ap.parse_args()
+    text = render(args.mesh)
+    print(text)
+    if args.emit:
+        out = os.path.join(RESULTS_DIR, "..", f"tables_{args.mesh}.md")
+        with open(out, "w") as f:
+            f.write(text + "\n")
+        print(f"# wrote {os.path.normpath(out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,254 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_flops_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = ici_bytes / 45e9  +  dci_bytes / 25e9
+
+``cost_analysis()`` is per-device under SPMD (verified empirically), so no
+chip division is applied.  Collective bytes are parsed from the compiled
+HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, summing *operand* sizes (per the brief).  Cross-pod
+(DCI) traffic is detected by decoding iota-format replica_groups
+(``[G,S]<=[dims]T(perm)``) and checking whether any group spans a pod
+boundary (device id // 256).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .mesh import DCI_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+__all__ = ["collective_bytes", "roofline_terms", "model_flops", "RooflineReport"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_LIST_RE = re.compile(r"replica_groups=\{(\{[\d,\{\} ]*\})\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (handles tuples by summing)."""
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _decode_groups(line: str) -> Optional[np.ndarray]:
+    """replica_groups -> (G, S) array of device ids, or None."""
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(g, s)
+    m = _LIST_RE.search(line)
+    if m:
+        groups = re.findall(r"\{([\d, ]+)\}", m.group(1) + "}")
+        rows = [[int(x) for x in g.replace(" ", "").split(",") if x] for g in groups]
+        width = max(len(r) for r in rows)
+        return np.array([r + r[-1:] * (width - len(r)) for r in rows])
+    return None
+
+
+def collective_bytes(hlo_text: str, pod_size: int = 256) -> Dict[str, float]:
+    """Per-device collective operand bytes, split ICI vs cross-pod DCI."""
+    # instruction name -> result type string (operand lookup table)
+    types: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        # type prefix of rhs up to the op name
+        tm = re.match(r"((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s", rhs)
+        if tm:
+            types[m.group(1)] = tm.group(1)
+
+    out = {"ici_bytes": 0.0, "dci_bytes": 0.0, "n_collectives": 0}
+    per_op: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        opm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")\(([^)]*)\)", line)
+        if not opm:
+            continue
+        op_name = opm.group(1)
+        if f" {op_name}(" not in line and f"{op_name}(" not in line:
+            continue
+        # operand bytes: inline-typed operands or lookup by name
+        operand_str = opm.group(2)
+        nbytes = _shape_bytes(operand_str)
+        if nbytes == 0:
+            for ref in re.findall(r"%([\w.\-]+)", operand_str):
+                nbytes += _shape_bytes(types.get(ref, ""))
+        groups = _decode_groups(line)
+        crosses_pod = False
+        if groups is not None and groups.size:
+            crosses_pod = bool(((groups // pod_size).max(axis=1)
+                                != (groups // pod_size).min(axis=1)).any())
+        key = "dci_bytes" if crosses_pod else "ici_bytes"
+        out[key] += nbytes
+        out["n_collectives"] += 1
+        per_op[op_name] = per_op.get(op_name, 0.0) + nbytes
+    out["by_op"] = per_op
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    ici_bytes: float
+    dci_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    memory_stats: Dict[str, float]
+    n_collectives: int = 0
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    memory_stats: Dict[str, float],
+    model_total_flops: float,
+) -> RooflineReport:
+    """Roofline from the loop-aware analyzer (XLA cost_analysis counts
+    while bodies once; see repro.launch.hlo_cost)."""
+    from .hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text, pod_size=256)
+    flops = hc.flops
+    byts = hc.bytes
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = hc.ici_bytes / ICI_BW + hc.dci_bytes / DCI_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    useful = model_total_flops / max(flops * n_chips, 1.0)
+    mem = dict(memory_stats)
+    mem["xla_flops_per_device"] = float(cost.get("flops", 0.0))
+    mem["xla_bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        ici_bytes=hc.ici_bytes,
+        dci_bytes=hc.dci_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_total_flops,
+        useful_ratio=useful,
+        memory_stats=mem,
+        n_collectives=int(hc.n_collectives),
+        by_op={k: float(v) for k, v in hc.by_collective.items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS per cell (global, not per-device)
+# ---------------------------------------------------------------------------
+
+def model_flops(arch: str, shape: str) -> float:
+    from ..configs import registry, shapes as shp
+
+    mod = registry.get_arch(arch)
+    cfg = mod.CONFIG
+    fam = mod.SHAPE_FAMILY
+    if fam == "lm":
+        s = shp.LM_SHAPES[shape]
+        n_active = cfg.n_active_params()
+        if s.kind == "train":
+            tokens = s.seq_len * s.global_batch
+            return 6.0 * n_active * tokens
+        if s.kind == "prefill":
+            tokens = s.seq_len * s.global_batch
+            return 2.0 * n_active * tokens
+        # decode: one token per sequence + attention over the KV cache
+        hd = cfg.resolved_head_dim
+        attn_kv = (
+            4.0 * cfg.n_layers * cfg.n_heads * hd * s.seq_len * s.global_batch
+        )
+        return 2.0 * n_active * s.global_batch + attn_kv
+    if fam == "gnn":
+        s = shp.GNN_SHAPES[shape]
+        h = cfg.d_hidden
+        mult = 3.0 if s.kind == "train" else 1.0  # fwd + 2x bwd
+        if cfg.kind in ("meshgraphnet", "graphcast"):
+            per_layer = 2.0 * (s.raw_edges * 3 * h * h * cfg.mlp_layers
+                               + s.raw_nodes * 2 * h * h * cfg.mlp_layers)
+            enc = 2.0 * s.raw_nodes * s.d_feat * h + 2.0 * s.raw_edges * 4 * h
+            return mult * (cfg.n_layers * per_layer + enc)
+        if cfg.kind == "schnet":
+            per_block = 2.0 * (s.raw_edges * cfg.n_rbf * h + s.raw_edges * h
+                               + s.raw_nodes * 2 * h * h)
+            return mult * (cfg.n_layers * per_block + 2.0 * s.raw_nodes * s.d_feat * h)
+        if cfg.kind == "dimenet":
+            tri = shp.triplet_count(s, cfg.triplet_factor)
+            per_block = 2.0 * tri * (cfg.n_bilinear * h * h / max(h, 1) + cfg.n_bilinear * h) \
+                + 2.0 * tri * cfg.n_radial * cfg.n_spherical * cfg.n_bilinear \
+                + 2.0 * s.raw_edges * 2 * h * h
+            return mult * (cfg.n_layers * per_block + 2.0 * s.raw_edges * 3 * h)
+    if fam == "recsys":
+        s = shp.REC_SHAPES[shape]
+        d = cfg.d
+        L = cfg.seq_len
+        blocks = 2.0 * cfg.n_blocks * (4 * L * d * d + 2 * L * L * d) * s.batch
+        if s.kind == "train":
+            return 3.0 * (blocks + 2.0 * s.batch * L * d)  # + embedding dots
+        if s.kind == "score_all":
+            return blocks + 2.0 * s.batch * cfg.n_items * d
+        return blocks + 2.0 * s.batch * s.n_candidates * d
+    if fam == "graphgen":
+        cfg2 = mod.CONFIG
+        return 2.0 * (2 * cfg2.n_in_edges + cfg2.n_correction) * cfg2.pagerank_iters
+    raise ValueError(fam)

@@ -1,0 +1,46 @@
+"""Serving launcher: batched LM generation on the local mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import registry
+from ..models import transformer
+from ..serve.server import BatchedServer, Request
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = registry.get_arch(args.arch).SMOKE
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchedServer(params, cfg, batch_slots=args.slots, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)),
+            max_new_tokens=args.new_tokens,
+        )
+        for i in range(args.requests)
+    ]
+    out = server.run(reqs)
+    for rid in sorted(out):
+        print(f"request {rid}: {out[rid]}")
+    assert len(out) == args.requests
+    print("served", len(out), "requests")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

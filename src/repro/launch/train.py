@@ -1,0 +1,117 @@
+"""Training launcher: --arch <id> end-to-end training on the local mesh.
+
+Production anatomy on a real cluster: the same module runs under
+``jax.distributed.initialize`` per host, the mesh comes from
+``make_production_mesh``, and the orchestrator supervises restarts.  On
+this container it runs the smoke-scale configs end-to-end (CPU), or
+lowers full configs when ``--dry-run`` is passed.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --steps 20 \
+        --smoke --checkpoint-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import registry
+from ..data.pipeline import TokenPipeline, sasrec_batches
+from ..distributed.sharding import use_mesh_rules
+from ..launch.mesh import make_host_mesh
+from ..launch.orchestrator import Supervisor
+from ..models import gnn, sasrec, transformer
+from ..train import optimizer as opt_lib
+from ..train import steps as steps_lib
+from ..train.checkpoint import CheckpointManager
+
+
+def build_lm_training(cfg, smoke_batch=4, smoke_seq=32):
+    optimizer = opt_lib.adamw(opt_lib.cosine_schedule(3e-4, 20, 1000))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    state = steps_lib.init_train_state(params, optimizer)
+    step_fn = jax.jit(steps_lib.build_lm_train_step(cfg, optimizer))
+    pipe = iter(
+        TokenPipeline(cfg.vocab_size, smoke_seq, smoke_batch).device_iter()
+    )
+    return state, step_fn, pipe
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    mod = registry.get_arch(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    mesh = make_host_mesh()
+    supervisor = Supervisor(n_workers=1, checkpoint_interval=args.checkpoint_every)
+    mgr = (
+        CheckpointManager(args.checkpoint_dir, keep_last=2)
+        if args.checkpoint_dir
+        else None
+    )
+
+    if mod.SHAPE_FAMILY == "lm":
+        state, step_fn, pipe = build_lm_training(cfg)
+        batch_of = lambda: next(pipe)
+    elif mod.SHAPE_FAMILY == "recsys":
+        optimizer = opt_lib.adamw(1e-3)
+        params = sasrec.init_params(jax.random.PRNGKey(0), cfg)
+        state = steps_lib.init_train_state(params, optimizer)
+        step_fn = jax.jit(steps_lib.build_sasrec_train_step(cfg, optimizer))
+        it = sasrec_batches(cfg.n_items, cfg.seq_len, 8)
+        batch_of = lambda: {k: jnp.asarray(v) for k, v in next(it).items()}
+    else:
+        from ..data.graphs import batch_molecules, graph_batch_from_numpy, random_graph
+
+        optimizer = opt_lib.adamw(1e-3)
+        if cfg.kind in ("schnet", "dimenet"):
+            g = batch_molecules(4, 8, 20, d_feat=6, seed=1)
+            target = np.zeros((4, cfg.d_out), np.float32)
+        else:
+            src, dst, feats, pos = random_graph(64, 200, 6, seed=1, with_positions=True)
+            g = graph_batch_from_numpy(src, dst, feats, positions=pos)
+            target = np.zeros((64, cfg.d_out), np.float32)
+        params = gnn.init_params(jax.random.PRNGKey(0), cfg, d_in=6)
+        state = steps_lib.init_train_state(params, optimizer)
+        step_fn = jax.jit(steps_lib.build_gnn_train_step(cfg, optimizer))
+        batch = {"graph": g, "target": jnp.asarray(target)}
+        batch_of = lambda: batch
+
+    start = 0
+    if args.resume and mgr is not None and mgr.latest_step() is not None:
+        state, start = mgr.restore_latest()
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+        print(f"resumed from step {start}")
+
+    with use_mesh_rules(mesh, dict(cfg.sharding_rules)):
+        for i in range(start, args.steps):
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch_of())
+            dt = time.perf_counter() - t0
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if mgr is not None and supervisor.should_checkpoint(i + 1):
+                mgr.save(i + 1, state)
+        if mgr is not None:
+            mgr.save(args.steps, state)
+            mgr.wait()
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,333 @@
+"""Shared neural building blocks (pure JAX, framework-local).
+
+Everything here is functional: ``init_*`` builds parameter pytrees,
+apply functions are pure.  Tensors are annotated with logical axes via
+:func:`repro.distributed.sharding.shard` (no-op without a mesh context).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+
+__all__ = [
+    "dense_init",
+    "rms_norm",
+    "layer_norm",
+    "mlp_init",
+    "mlp_apply",
+    "rope",
+    "flash_attention",
+    "embedding_bag",
+]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * weight.astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * weight.astype(dtype) + bias.astype(dtype)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    """Plain MLP parameter stack: dims = [in, hidden..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(k, dims[i], dims[i + 1], dtype)
+        for i, k in enumerate(keys)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params, x, activation=jax.nn.gelu, final_activation=False):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"].astype(x.dtype) + params[f"b{i}"].astype(x.dtype)
+        if i < n - 1 or final_activation:
+            x = activation(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding, llama split-half convention.
+
+    x: (..., T, n_heads, head_dim); positions: broadcastable to (..., T).
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention with GQA — the memory-safe default path.
+# ---------------------------------------------------------------------------
+
+def _flash_impl(
+    q, k, v, causal, q_offset, kv_length, block_q, block_kv,
+    return_lse: bool = False,
+):
+    """Online-softmax blockwise attention core (padded internally)."""
+    B, Tq, H, D = q.shape
+    _, Tk, KV, _ = k.shape
+    if H % KV:
+        raise ValueError(f"H={H} not a multiple of KV={KV}")
+    G = H // KV
+    block_q = min(block_q, Tq)
+    block_kv = min(block_kv, Tk)
+    pad_q = (-Tq) % block_q
+    pad_kv = (-Tk) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    Tq_p, Tk_p = Tq + pad_q, Tk + pad_kv
+    nq, nkv = Tq_p // block_q, Tk_p // block_kv
+
+    qg = q.reshape(B, nq, block_q, KV, G, D)
+    kg = k.reshape(B, nkv, block_kv, KV, D)
+    vg = v.reshape(B, nkv, block_kv, KV, D)
+    scale = 1.0 / np.sqrt(D)
+    q_off = jnp.asarray(q_offset, dtype=jnp.int32)
+    kv_valid = jnp.full((B,), Tk, dtype=jnp.int32) if kv_length is None else kv_length
+
+    def q_block(carry, qi):
+        qb = qg[:, qi]  # (B, bq, KV, G, D)
+        q_pos = q_off + qi * block_q + jnp.arange(block_q, dtype=jnp.int32)
+
+        def kv_block(state, ki):
+            acc, m, l = state
+            kb = kg[:, ki]
+            vb = vg[:, ki]
+            s = jnp.einsum(
+                "bqkgd,bskd->bqkgs", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            kv_pos = ki * block_kv + jnp.arange(block_kv, dtype=jnp.int32)
+            mask = kv_pos[None, :] < kv_valid[:, None]  # (B, bkv) padding
+            if causal:
+                mask = mask[:, None, :] & (
+                    kv_pos[None, None, :] <= q_pos[None, :, None]
+                )  # (B, bq, bkv)
+                s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+            else:
+                s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard all -inf rows
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isneginf(s), 0.0, p)
+            alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, block_q, KV, G, D), jnp.float32),
+            jnp.full((B, block_q, KV, G), -jnp.inf, jnp.float32),
+            jnp.zeros((B, block_q, KV, G), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(kv_block, init, jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        # logsumexp per row; +inf for fully-masked rows so recomputed p = 0
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+        return carry, (out.astype(q.dtype), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Tq_p, KV, G, D)
+    out = out[:, :Tq].reshape(B, Tq, H, D)
+    if return_lse:
+        lse = jnp.moveaxis(lses, 0, 1).reshape(B, Tq_p, KV, G)[:, :Tq]
+        return out, lse
+    return out
+
+
+# -- FlashAttention backward: recompute p per block from saved (q,k,v,lse) —
+# nothing quadratic is ever saved (this is the paper-exact FA bwd dataflow).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_train(q, k, v, causal, block_q, block_kv):
+    return _flash_impl(q, k, v, causal, 0, None, block_q, block_kv)
+
+
+def _flash_train_fwd(q, k, v, causal, block_q, block_kv):
+    out, lse = _flash_impl(
+        q, k, v, causal, 0, None, block_q, block_kv, return_lse=True
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_train_bwd(causal, block_q, block_kv, res, do):
+    q, k, v, out, lse = res
+    B, Tq, H, D = q.shape
+    _, Tk, KV, _ = k.shape
+    G = H // KV
+    block_q = min(block_q, Tq)
+    block_kv = min(block_kv, Tk)
+    pad_q = (-Tq) % block_q
+    pad_kv = (-Tk) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    dop = jnp.pad(do, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else do
+    outp = jnp.pad(out, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else out
+    lsep = (
+        jnp.pad(lse, ((0, 0), (0, pad_q), (0, 0), (0, 0)),
+                constant_values=jnp.inf)
+        if pad_q else lse
+    )
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else v
+    Tq_p, Tk_p = Tq + pad_q, Tk + pad_kv
+    nq, nkv = Tq_p // block_q, Tk_p // block_kv
+
+    qg = qp.reshape(B, nq, block_q, KV, G, D)
+    dog = dop.reshape(B, nq, block_q, KV, G, D)
+    lseg = lsep.reshape(B, nq, block_q, KV, G)
+    # delta = rowsum(do * out)
+    deltag = jnp.sum(
+        dop.reshape(B, nq, block_q, KV, G, D).astype(jnp.float32)
+        * outp.reshape(B, nq, block_q, KV, G, D).astype(jnp.float32),
+        axis=-1,
+    )
+    kg = kp.reshape(B, nkv, block_kv, KV, D)
+    vg = vp.reshape(B, nkv, block_kv, KV, D)
+    scale = 1.0 / np.sqrt(D)
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = qg[:, qi].astype(jnp.float32)
+        dob = dog[:, qi].astype(jnp.float32)
+        lseb = lseg[:, qi]
+        deltab = deltag[:, qi]
+        q_pos = qi * block_q + jnp.arange(block_q, dtype=jnp.int32)
+
+        def kv_block(carry2, ki):
+            dqb, dk_acc, dv_acc = carry2
+            kb = kg[:, ki].astype(jnp.float32)
+            vb = vg[:, ki].astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qb, kb) * scale
+            kv_pos = ki * block_kv + jnp.arange(block_kv, dtype=jnp.int32)
+            mask = kv_pos[None, :] < Tk  # padding mask (B-broadcast)
+            if causal:
+                cm = kv_pos[None, None, :] <= q_pos[None, :, None]
+                s = jnp.where((mask[:, None, :] & cm)[:, :, None, None, :], s, -jnp.inf)
+            else:
+                s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+            p = jnp.exp(s - lseb[..., None])          # rows with lse=inf -> 0
+            p = jnp.where(jnp.isneginf(s), 0.0, p)
+            dp = jnp.einsum("bqkgd,bskd->bqkgs", dob, vb)
+            ds = p * (dp - deltab[..., None])
+            dqb = dqb + scale * jnp.einsum("bqkgs,bskd->bqkgd", ds, kb)
+            dk_blk = scale * jnp.einsum("bqkgs,bqkgd->bskd", ds, qb)
+            dv_blk = jnp.einsum("bqkgs,bqkgd->bskd", p, dob)
+            dk_acc = dk_acc.at[:, ki].add(dk_blk)
+            dv_acc = dv_acc.at[:, ki].add(dv_blk)
+            return (dqb, dk_acc, dv_acc), None
+
+        dqb0 = jnp.zeros((B, block_q, KV, G, D), jnp.float32)
+        (dqb, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_block, (dqb0, dk_acc, dv_acc), jnp.arange(nkv)
+        )
+        return (dk_acc, dv_acc), dqb
+
+    dk0 = jnp.zeros((B, nkv, block_kv, KV, D), jnp.float32)
+    dv0 = jnp.zeros((B, nkv, block_kv, KV, D), jnp.float32)
+    (dk_acc, dv_acc), dq_blocks = jax.lax.scan(
+        q_block, (dk0, dv0), jnp.arange(nq)
+    )
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(B, Tq_p, KV, G, D)[:, :Tq]
+    dq = dq.reshape(B, Tq, H, D).astype(q.dtype)
+    dk = dk_acc.reshape(B, Tk_p, KV, D)[:, :Tk].astype(k.dtype)
+    dv = dv_acc.reshape(B, Tk_p, KV, D)[:, :Tk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_train.defvjp(_flash_train_fwd, _flash_train_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,             # (B, Tq, H, D)
+    k: jnp.ndarray,             # (B, Tk, KV, D)
+    v: jnp.ndarray,             # (B, Tk, KV, D)
+    *,
+    causal: bool = True,
+    q_offset: jnp.ndarray | int = 0,   # absolute position of q[0] (decode)
+    kv_length: Optional[jnp.ndarray] = None,  # valid kv prefix length (B,)
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    """Blockwise attention; never materializes (Tq, Tk) — in either pass.
+
+    GQA: H must be a multiple of KV; query heads are grouped over kv heads.
+    The training path (no cache: ``q_offset == 0``, ``kv_length is None``)
+    runs a custom-VJP FlashAttention backward that recomputes probability
+    blocks from (q, k, v, lse); cache/serving paths use the plain forward.
+    """
+    train_path = kv_length is None and isinstance(q_offset, int) and q_offset == 0
+    if train_path:
+        return _flash_train(q, k, v, causal, block_q, block_kv)
+    return _flash_impl(q, k, v, causal, q_offset, kv_length, block_q, block_kv)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag — JAX has no native one (kernel taxonomy §RecSys): gather +
+# segment-reduce, the recsys hot path and the condensed engine's sibling.
+# ---------------------------------------------------------------------------
+
+def embedding_bag(
+    table: jnp.ndarray,          # (n_items, d)
+    indices: jnp.ndarray,        # (n_lookups,)
+    segment_ids: jnp.ndarray,    # (n_lookups,) -> bag id
+    num_bags: int,
+    mode: str = "sum",
+    weights: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+        n = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, dtype=rows.dtype), segment_ids, num_bags
+        )
+        return s / jnp.maximum(n, 1.0)[:, None]
+    if mode == "max":
+        out = jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
+        return jnp.where(jnp.isneginf(out), 0.0, out)
+    raise ValueError(mode)

@@ -1,0 +1,194 @@
+"""SASRec: self-attentive sequential recommendation (arXiv:1808.09781).
+
+Config: embed_dim=50, 2 blocks, 1 head, seq_len=50.  The item table is the
+dominant state (n_items x d, row-sharded over the 'items'/model axis —
+recsys EP).  Lookups go through :func:`repro.models.layers.embedding_bag`
+machinery (gather + segment ops; JAX has no native EmbeddingBag).
+
+Steps provided:
+* ``train_loss``      — BCE with one sampled negative per position (paper);
+* ``user_embedding``  — encode a behavior sequence;
+* ``score_all``       — user x full-catalog scores (serve_p99/serve_bulk);
+* ``score_candidates``— one user vs n_candidates gathered items
+                        (retrieval_cand; batched dot, not a loop).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import RecsysConfig
+from ..distributed.sharding import shard
+from .layers import dense_init, flash_attention, layer_norm
+
+__all__ = [
+    "init_params",
+    "logical_axes",
+    "user_embedding",
+    "train_loss",
+    "score_all",
+    "score_candidates",
+]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    pdt = _dt(cfg.param_dtype)
+    d = cfg.d
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    params = {
+        "item_embed": (jax.random.normal(ks[0], (cfg.n_items, d)) * 0.02).astype(pdt),
+        "pos_embed": (jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02).astype(pdt),
+        "blocks": [],
+        "final_ln": jnp.ones((d,), pdt),
+        "final_ln_b": jnp.zeros((d,), pdt),
+    }
+    blocks = []
+    for i in range(cfg.n_blocks):
+        o = 2 + 6 * i
+        blocks.append(
+            {
+                "wq": dense_init(ks[o], d, d, pdt),
+                "wk": dense_init(ks[o + 1], d, d, pdt),
+                "wv": dense_init(ks[o + 2], d, d, pdt),
+                "w1": dense_init(ks[o + 3], d, d, pdt),
+                "w2": dense_init(ks[o + 4], d, d, pdt),
+                "ln1": jnp.ones((d,), pdt),
+                "ln1_b": jnp.zeros((d,), pdt),
+                "ln2": jnp.ones((d,), pdt),
+                "ln2_b": jnp.zeros((d,), pdt),
+            }
+        )
+    params["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+def logical_axes(cfg: RecsysConfig) -> Dict:
+    blk = {
+        "wq": (None, None, "ff"), "wk": (None, None, "ff"),
+        "wv": (None, None, "ff"), "w1": (None, None, "ff"),
+        "w2": (None, "ff", None),
+        "ln1": (None, None), "ln1_b": (None, None),
+        "ln2": (None, None), "ln2_b": (None, None),
+    }
+    return {
+        "item_embed": ("items", None),
+        "pos_embed": (None, None),
+        "blocks": blk,
+        "final_ln": (None,),
+        "final_ln_b": (None,),
+    }
+
+
+def user_embedding(
+    params: Dict, seqs: jnp.ndarray, cfg: RecsysConfig
+) -> jnp.ndarray:
+    """seqs: (B, L) item ids, 0 = padding. Returns (B, L, d) states."""
+    adt = _dt(cfg.dtype)
+    B, L = seqs.shape
+    d = cfg.d
+    x = jnp.take(params["item_embed"], seqs, axis=0).astype(adt)
+    x = x * np.sqrt(d) + params["pos_embed"][None, :L].astype(adt)
+    mask = (seqs > 0)
+    x = x * mask[..., None].astype(adt)
+    x = shard(x, "batch", None, None)
+
+    def block(x, bp):
+        h = layer_norm(x, bp["ln1"], bp["ln1_b"])
+        q = (h @ bp["wq"].astype(adt)).reshape(B, L, cfg.n_heads, d // cfg.n_heads)
+        k = (h @ bp["wk"].astype(adt)).reshape(B, L, cfg.n_heads, d // cfg.n_heads)
+        v = (h @ bp["wv"].astype(adt)).reshape(B, L, cfg.n_heads, d // cfg.n_heads)
+        attn = flash_attention(
+            q, k, v, causal=True, block_q=min(64, L), block_kv=min(64, L),
+        )
+        x = x + attn.reshape(B, L, d)
+        h = layer_norm(x, bp["ln2"], bp["ln2_b"])
+        h = jax.nn.relu(h @ bp["w1"].astype(adt)) @ bp["w2"].astype(adt)
+        x = (x + h) * mask[..., None].astype(adt)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = layer_norm(x, params["final_ln"], params["final_ln_b"])
+    return x
+
+
+def train_loss(
+    params: Dict,
+    seqs: jnp.ndarray,        # (B, L) inputs
+    pos_items: jnp.ndarray,   # (B, L) next-item targets (0 = pad)
+    neg_items: jnp.ndarray,   # (B, L) sampled negatives
+    cfg: RecsysConfig,
+) -> jnp.ndarray:
+    states = user_embedding(params, seqs, cfg)  # (B, L, d)
+    pe = jnp.take(params["item_embed"], pos_items, axis=0).astype(states.dtype)
+    ne = jnp.take(params["item_embed"], neg_items, axis=0).astype(states.dtype)
+    pos_logit = jnp.sum(states * pe, axis=-1).astype(jnp.float32)
+    neg_logit = jnp.sum(states * ne, axis=-1).astype(jnp.float32)
+    mask = (pos_items > 0).astype(jnp.float32)
+    loss = -(
+        jax.nn.log_sigmoid(pos_logit) + jax.nn.log_sigmoid(-neg_logit)
+    )
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def score_all(
+    params: Dict,
+    seqs: jnp.ndarray,
+    cfg: RecsysConfig,
+    top_k: int = 10,
+    item_chunks: int = 16,
+    batch_chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Last-position user embedding x full catalog -> (scores, ids) top-k.
+
+    Two-stage top-k: a per-item-chunk top-k (chunk axis rides the 'items'
+    mesh axis, so stage 1 is shard-local) followed by a tiny global merge —
+    the full (B, n_items) logits never need to be gathered.  ``batch_chunk``
+    additionally tiles huge offline-scoring batches (serve_bulk) so the
+    logits working set stays bounded.
+    """
+    states = user_embedding(params, seqs, cfg)
+    u = states[:, -1]  # (B, d)
+    u = shard(u, "batch", None)
+    n_items = params["item_embed"].shape[0]
+    while n_items % item_chunks:
+        item_chunks -= 1  # smoke-scale catalogs: fall back gracefully
+    chunk = n_items // item_chunks
+    table = params["item_embed"].reshape(item_chunks, chunk, cfg.d)
+
+    def score_block(u_blk):
+        logits = jnp.einsum(
+            "bd,cnd->bcn", u_blk, table.astype(u_blk.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        logits = shard(logits, "batch", "items", None)
+        s, i = jax.lax.top_k(logits, top_k)               # (b, chunks, k)
+        i = i + (jnp.arange(item_chunks, dtype=jnp.int32) * chunk)[None, :, None]
+        s2, idx = jax.lax.top_k(s.reshape(s.shape[0], -1), top_k)
+        ids = jnp.take_along_axis(i.reshape(i.shape[0], -1), idx, axis=-1)
+        return s2, ids
+
+    if batch_chunk is None or u.shape[0] <= batch_chunk:
+        return score_block(u)
+    nb = u.shape[0] // batch_chunk
+    s, ids = jax.lax.map(score_block, u.reshape(nb, batch_chunk, -1))
+    return s.reshape(u.shape[0], top_k), ids.reshape(u.shape[0], top_k)
+
+
+def score_candidates(
+    params: Dict,
+    seqs: jnp.ndarray,          # (B, L)
+    candidates: jnp.ndarray,    # (B, n_cand) item ids
+    cfg: RecsysConfig,
+) -> jnp.ndarray:
+    """Batched dot against a candidate set (retrieval scoring)."""
+    states = user_embedding(params, seqs, cfg)
+    u = states[:, -1]
+    cand = jnp.take(params["item_embed"], candidates, axis=0).astype(u.dtype)
+    return jnp.einsum("bd,bnd->bn", u, cand, preferred_element_type=jnp.float32)

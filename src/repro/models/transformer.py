@@ -1,0 +1,319 @@
+"""Decoder-only transformer LM: GQA + RoPE, dense or MoE FFN.
+
+Production posture:
+
+* layers stacked + ``jax.lax.scan`` (O(1) HLO in depth, MaxText-style);
+* selectable remat policy on the layer body;
+* blockwise (flash) attention — (Tq, Tk) never materialized;
+* KV cache for serving (prefill writes a prefix, decode appends);
+* logical-axis sharding annotations throughout.
+
+Param pytree (leaves stacked over layers under "layers"):
+
+    embed (V, D); layers/{ln1, ln2 (L, D), attn/{wq, wk, wv, wo},
+    mlp/{w_gate, w_up, w_down} or moe/{router, w_gate, w_up, w_down}};
+    final_norm (D,); lm_head (D, V) unless tied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TransformerConfig
+from ..distributed.sharding import shard
+from . import moe as moe_lib
+from .layers import dense_init, flash_attention, rms_norm, rope
+
+__all__ = ["init_params", "logical_axes", "forward", "KVCache", "init_cache"]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: TransformerConfig) -> Dict:
+    pdt = _dt(cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    D, H, KV, L = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+
+    def layer_stack(k):
+        ks = jax.random.split(k, 8)
+        attn = {
+            "wq": dense_init(ks[0], D, H * hd, pdt),
+            "wk": dense_init(ks[1], D, KV * hd, pdt),
+            "wv": dense_init(ks[2], D, KV * hd, pdt),
+            "wo": dense_init(ks[3], H * hd, D, pdt),
+        }
+        if cfg.moe is not None:
+            ffn = {"moe": moe_lib.moe_init(ks[4], D, cfg.moe, pdt)}
+        else:
+            ffn = {
+                "mlp": {
+                    "w_gate": dense_init(ks[5], D, cfg.d_ff, pdt),
+                    "w_up": dense_init(ks[6], D, cfg.d_ff, pdt),
+                    "w_down": dense_init(ks[7], cfg.d_ff, D, pdt),
+                }
+            }
+        return {
+            "attn": attn,
+            **ffn,
+            "ln1": jnp.ones((D,), pdt),
+            "ln2": jnp.ones((D,), pdt),
+        }
+
+    layer_keys = jax.random.split(k_layers, L)
+    layers = jax.vmap(layer_stack)(layer_keys)
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, D)) * 0.02).astype(pdt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, D, cfg.vocab_size, pdt)
+    return params
+
+
+def logical_axes(cfg: TransformerConfig) -> Dict:
+    """Same structure as init_params, leaves = logical axis tuples."""
+    attn = {
+        "wq": (None, "embed_param", "heads"),
+        "wk": (None, "embed_param", "kv_heads"),
+        "wv": (None, "embed_param", "kv_heads"),
+        "wo": (None, "heads", "embed_param"),
+    }
+    if cfg.moe is not None:
+        ffn = {
+            "moe": {
+                k: (None,) + v
+                for k, v in moe_lib.moe_logical_axes().items()
+            }
+        }
+    else:
+        ffn = {
+            "mlp": {
+                "w_gate": (None, "embed_param", "ff"),
+                "w_up": (None, "embed_param", "ff"),
+                "w_down": (None, "ff", "embed_param"),
+            }
+        }
+    axes = {
+        "embed": ("vocab", "embed_param"),
+        "layers": {
+            "attn": attn,
+            **ffn,
+            "ln1": (None, None),
+            "ln2": (None, None),
+        },
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed_param", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "length"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class KVCache:
+    k: jnp.ndarray        # (L, B, max_len, KV, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray   # scalar int32: filled prefix
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    adt = _dt(cfg.dtype)
+    return KVCache(
+        k=jnp.zeros(shape, adt),
+        v=jnp.zeros(shape, adt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attention(
+    lp: Dict,
+    x: jnp.ndarray,
+    cfg: TransformerConfig,
+    pos_offset,
+    cache_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+    cache_len,
+):
+    B, T, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    q = (x @ lp["wq"].astype(x.dtype)).reshape(B, T, H, hd)
+    k = (x @ lp["wk"].astype(x.dtype)).reshape(B, T, KV, hd)
+    v = (x @ lp["wv"].astype(x.dtype)).reshape(B, T, KV, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    positions = pos_offset + jnp.arange(T, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache_kv is not None:
+        ck, cv = cache_kv  # (B, max_len, KV, hd)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+        kv_len = jnp.full((B,), cache_len + T, dtype=jnp.int32)
+        out = flash_attention(
+            q, ck, cv,
+            causal=False,  # masked by kv_length: all cached positions visible
+            q_offset=cache_len,
+            kv_length=kv_len,
+            block_q=cfg.attn_block_q,
+            block_kv=cfg.attn_block_kv,
+        ) if T == 1 else flash_attention(
+            q, ck, cv,
+            causal=True,
+            q_offset=cache_len,
+            kv_length=kv_len,
+            block_q=cfg.attn_block_q,
+            block_kv=cfg.attn_block_kv,
+        )
+        new_cache = (ck, cv)
+    else:
+        out = flash_attention(
+            q, k, v,
+            causal=True,
+            block_q=cfg.attn_block_q,
+            block_kv=cfg.attn_block_kv,
+        )
+        new_cache = None
+    out = shard(out, "batch", "seq", "heads", None)
+    y = out.reshape(B, T, H * hd) @ lp["wo"].astype(x.dtype)
+    return shard(y, "batch", "act_seq", "embed"), new_cache
+
+
+def _ffn(lp: Dict, x: jnp.ndarray, cfg: TransformerConfig):
+    B, T, D = x.shape
+    if cfg.moe is not None:
+        y, metrics = moe_lib.moe_apply(lp["moe"], x.reshape(B * T, D), cfg.moe)
+        return y.reshape(B, T, D), metrics
+    mlp = lp["mlp"]
+    g = x @ mlp["w_gate"].astype(x.dtype)
+    u = x @ mlp["w_up"].astype(x.dtype)
+    g = shard(g, "batch", "seq", "ff")
+    u = shard(u, "batch", "seq", "ff")
+    h = jax.nn.silu(g) * u
+    y = h @ mlp["w_down"].astype(x.dtype)
+    return shard(y, "batch", "act_seq", "embed"), {}
+
+
+def _layer_body(cfg: TransformerConfig, x, lp, pos_offset, cache_kv, cache_len):
+    h, new_cache = _attention(
+        lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+        pos_offset, cache_kv, cache_len,
+    )
+    x = x + h
+    h, metrics = _ffn(lp, rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+    x = x + h
+    aux = metrics.get("moe_aux_loss", jnp.zeros((), jnp.float32)) + metrics.get(
+        "moe_z_loss", jnp.zeros((), jnp.float32)
+    )
+    return x, new_cache, aux
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "minimal": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def forward(
+    params: Dict,
+    tokens: jnp.ndarray,                 # (B, T) int32
+    cfg: TransformerConfig,
+    cache: Optional[KVCache] = None,
+) -> Tuple[jnp.ndarray, Optional[KVCache], jnp.ndarray]:
+    """Returns (logits (B, T, V) f32, updated cache or None, aux loss)."""
+    adt = _dt(cfg.dtype)
+    # cast BEFORE the gather: the all-gather/dynamic-gather of the vocab-
+    # sharded table then moves bf16, not fp32 master weights (2x traffic)
+    x = jnp.take(params["embed"].astype(adt), tokens, axis=0)
+    x = shard(x, "batch", "act_seq", "embed")
+    pos_offset = cache.length if cache is not None else jnp.zeros((), jnp.int32)
+
+    # Re-assert per-layer weight shardings on the scanned slices: without
+    # this XLA may hoist the FSDP all-gather of the WHOLE layer stack out
+    # of the loop (fast, but 16x the weight memory at 405B scale).
+    layer_axes = logical_axes(cfg)["layers"]
+
+    def _constrain_lp(lp):
+        return jax.tree_util.tree_map(
+            lambda ax, w: shard(w, *ax[1:]),
+            layer_axes,
+            lp,
+            is_leaf=lambda a: isinstance(a, tuple)
+            and all(isinstance(e, str) or e is None for e in a),
+        )
+
+    def body(x, layer_inputs):
+        lp, cache_kv = layer_inputs
+        lp = _constrain_lp(lp)
+        x, new_cache, aux = _layer_body(cfg, x, lp, pos_offset, cache_kv, pos_offset)
+        return x, (new_cache, aux)
+
+    policy = _REMAT_POLICIES[cfg.remat_policy]
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+
+    if cfg.scan_layers:
+        cache_kv = (cache.k, cache.v) if cache is not None else None
+        xs = (params["layers"], cache_kv)
+        x, (new_caches, aux) = jax.lax.scan(body, x, xs)
+    else:
+        new_ks, new_vs, auxs = [], [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            ckv = (cache.k[i], cache.v[i]) if cache is not None else None
+            x, (nc, a) = body(x, (lp, ckv))
+            auxs.append(a)
+            if nc is not None:
+                new_ks.append(nc[0])
+                new_vs.append(nc[1])
+        aux = jnp.stack(auxs)
+        new_caches = (
+            (jnp.stack(new_ks), jnp.stack(new_vs)) if new_ks else None
+        )
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # Vocab-parallel logits (Megatron): under SP the residual stream is
+    # seq-sharded on 'model'; gathering seq here (cheap: bf16 activations)
+    # keeps V sharded, so the lm_head gradient reduces shard-locally
+    # instead of all-reducing a full (V, D) fp32 tensor.  "seq" is unmapped
+    # in every arch's rules, so this spec resolves to (batch, None, vocab).
+    x = shard(x, "batch", "seq", "embed")
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if cache is not None:
+        T = tokens.shape[1]
+        new_cache = KVCache(
+            k=new_caches[0], v=new_caches[1], length=cache.length + T
+        )
+    return logits, new_cache, jnp.sum(aux)

@@ -1,0 +1,1 @@
+"""Serving substrate: KV-cache serving loop and request batching."""

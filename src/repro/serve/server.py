@@ -1,0 +1,125 @@
+"""Batched LM serving loop: continuous prefill + decode over a KV cache.
+
+A deliberately compact production shape: fixed-slot batch, each slot an
+independent request; prefill admits new requests into free slots; decode
+advances all active slots one token per step.  (Slot-level batching is
+the scheduling core of vLLM-style serving; paging is out of scope for a
+CPU container and noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import TransformerConfig
+from ..models import transformer
+
+__all__ = ["Request", "BatchedServer"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Greedy-decode batched server over fixed slots (single host demo)."""
+
+    def __init__(
+        self,
+        params,
+        cfg: TransformerConfig,
+        batch_slots: int = 4,
+        max_len: int = 256,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.max_len = max_len
+        self.cache = transformer.init_cache(cfg, batch_slots, max_len)
+        self.lengths = np.zeros(batch_slots, dtype=np.int64)
+
+        def decode(params, cache, tokens):
+            logits, cache, _ = transformer.forward(params, tokens, cfg, cache)
+            return jnp.argmax(logits[:, -1], axis=-1), cache
+
+        self._decode = jax.jit(decode)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot (one slot at a time demo)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        # per-slot prefill: run the prompt through with a slot-local cache,
+        # then splice into the batch cache.
+        scfg = self.cfg
+        prompt = jnp.asarray(req.prompt[None, :], dtype=jnp.int32)
+        cache1 = transformer.init_cache(scfg, 1, self.max_len)
+        logits, cache1, _ = transformer.forward(self.params, prompt, scfg, cache1)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self.cache = transformer.KVCache(
+            k=self.cache.k.at[:, slot : slot + 1].set(cache1.k),
+            v=self.cache.v.at[:, slot : slot + 1].set(cache1.v),
+            length=self.cache.length,
+        )
+        self.lengths[slot] = req.prompt.size
+        self.slots[slot] = req
+        return True
+
+    def step(self) -> None:
+        """One decode step for every active slot."""
+        if all(s is None for s in self.slots):
+            return
+        tokens = np.zeros((len(self.slots), 1), dtype=np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None and s.generated:
+                tokens[i, 0] = s.generated[-1]
+        # batch cache length: slots grow in lockstep in this demo; use max.
+        cache = transformer.KVCache(
+            k=self.cache.k, v=self.cache.v,
+            length=jnp.asarray(int(self.lengths.max()), jnp.int32),
+        )
+        nxt, cache = self._decode(self.params, cache, jnp.asarray(tokens))
+        self.cache = cache
+        nxt = np.asarray(nxt)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.generated.append(int(nxt[i]))
+            self.lengths[i] += 1
+            if len(s.generated) >= s.max_new_tokens:
+                s.done = True
+                self.slots[i] = None
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        pending = list(requests)
+        out: Dict[int, List[int]] = {}
+        active: List[Request] = []
+        while pending or any(self.slots):
+            while pending and self._free_slot() is not None:
+                r = pending.pop(0)
+                self.admit(r)
+                active.append(r)
+            self.step()
+            for r in active:
+                if r.done:
+                    out[r.rid] = r.generated
+            active = [r for r in active if not r.done]
+        for r in requests:
+            out.setdefault(r.rid, r.generated)
+        return out

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, train-step builders, checkpointing,
+fault tolerance."""

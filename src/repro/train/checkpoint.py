@@ -1,0 +1,200 @@
+"""Fault-tolerant checkpointing (no orbax in this environment — built here).
+
+Layout::
+
+    <dir>/step_00001230/          # atomic: written as .tmp then renamed
+        manifest.json             # {path: {file, dtype, shape}}, step, ts
+        0000.bin, 0001.bin, ...   # raw little-endian buffers
+    <dir>/LATEST                  # text file: last committed step
+
+Guarantees:
+* step-atomic commits (tmp dir + rename; LATEST written after rename);
+* restart safety: restore() ignores uncommitted .tmp dirs;
+* keep-last-k retention;
+* async saves on a background thread (snapshot taken synchronously);
+* dtype-safe for bf16 (raw bytes + ml_dtypes names in the manifest).
+
+State trees must be nested dicts with array leaves (the shape of all
+train states in this framework).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+    else:
+        out.append((prefix.rstrip("/"), tree))
+    return out
+
+
+def _unflatten(items: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, val in items.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save_checkpoint(directory: str, step: int, state) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:010d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: Dict[str, Any] = {"step": int(step), "ts": time.time(), "arrays": {}}
+    for i, (path, leaf) in enumerate(_flatten(state)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{i:04d}.bin"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(arr.tobytes())
+        manifest["arrays"][path] = {
+            "file": fname,
+            "dtype": arr.dtype.name,
+            "shape": list(arr.shape),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # the commit point
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(str(step))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        # scan for committed dirs (LATEST may have been lost)
+        steps = [
+            int(d.split("_")[1])
+            for d in os.listdir(directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(directory, d, "manifest.json"))
+        ] if os.path.isdir(directory) else []
+        return max(steps) if steps else None
+    with open(latest) as f:
+        return int(f.read().strip())
+
+
+def restore_checkpoint(
+    directory: str,
+    step: Optional[int] = None,
+    shardings=None,
+):
+    """Restore a state tree; optionally device_put with a shardings tree."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes  # jax dependency; provides bfloat16 numpy dtype
+
+    items = {}
+    for path, meta in manifest["arrays"].items():
+        dtype = np.dtype(getattr(ml_dtypes, meta["dtype"], meta["dtype"]))
+        with open(os.path.join(d, meta["file"]), "rb") as f:
+            buf = f.read()
+        expected = int(np.prod(meta["shape"])) * dtype.itemsize if meta["shape"] else dtype.itemsize
+        if len(buf) != expected:
+            raise IOError(
+                f"corrupt checkpoint {d}: {meta['file']} has {len(buf)} bytes, "
+                f"expected {expected} for {path}"
+            )
+        items[path] = np.frombuffer(buf, dtype=dtype).reshape(meta["shape"])
+    tree = _unflatten(items)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings
+        )
+    return tree, step
+
+
+class CheckpointManager:
+    """Retention + async writes + restart discovery."""
+
+    def __init__(
+        self,
+        directory: str,
+        keep_last: int = 3,
+        async_save: bool = True,
+    ):
+        self.directory = directory
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state) -> None:
+        self.wait()
+        # snapshot on the caller thread (values may be donated/mutated after)
+        snapshot = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state
+        )
+        if not self.async_save:
+            self._commit(step, snapshot)
+            return
+        self._thread = threading.Thread(
+            target=self._commit, args=(step, snapshot), daemon=True
+        )
+        self._thread.start()
+
+    def _commit(self, step: int, snapshot) -> None:
+        try:
+            save_checkpoint(self.directory, step, snapshot)
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True
+            )
+
+    # -- restore --------------------------------------------------------------
+    def restore_latest(self, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)

@@ -1,0 +1,216 @@
+"""Optimizers from scratch (no optax in this environment).
+
+API mirrors the usual GradientTransformation: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  Features needed at scale:
+
+* AdamW with configurable moment dtype (``bf16`` halves optimizer HBM for
+  405B-class models — see llama3-405b config);
+* Adafactor (factored second moment: rows+cols instead of full tensors);
+* global-norm clipping, weight decay masks, LR schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgdm",
+    "adafactor",
+    "clip_by_global_norm",
+    "apply_updates",
+    "cosine_schedule",
+    "linear_warmup",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def linear_warmup(base_lr: float, warmup: int):
+    return lambda step: base_lr * jnp.minimum(
+        jnp.asarray(step, jnp.float32) / jnp.maximum(warmup, 1), 1.0
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree
+    )
+    return jnp.sqrt(sum(jax.tree_util.tree_leaves(sq)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: str = "float32",
+    decay_mask: Optional[Callable] = None,   # path-aware mask fn(tree)->tree of bool
+) -> Optimizer:
+    mdt = _dt(moment_dtype)
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=mdt)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m32 / bc1
+            vh = v32 / bc2
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(mdt), v32.astype(mdt)
+
+        if decay_mask is not None:
+            mask = decay_mask(params)
+
+            def upd_masked(g, m, v, p, use_wd):
+                g32 = g.astype(jnp.float32)
+                m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+                v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+                wd = jnp.where(use_wd, weight_decay, 0.0)
+                u = -lr_t * (
+                    (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+                    + wd * p.astype(jnp.float32)
+                )
+                return u, m32.astype(mdt), v32.astype(mdt)
+
+            out = jax.tree_util.tree_map(
+                upd_masked, grads, state["m"], state["v"], params, mask
+            )
+        else:
+            out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Callable | float, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, m):
+            m32 = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+            return -lr_t * m32, m32.astype(m.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["mom"])
+        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mom": new_m}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: Callable | float,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Factored second-moment optimizer: O(rows+cols) state for matrices —
+    the large-model memory saver (Shazeer & Stern, 2018), simplified."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"f": jax.tree_util.tree_map(factored, params)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s):
+            g32 = g.astype(jnp.float32)
+            sq = g32 * g32 + eps
+            if "r" in s:
+                r = beta * s["r"] + (1 - beta) * jnp.mean(sq, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(sq, axis=-2)
+                denom = (
+                    r[..., None]
+                    * c[..., None, :]
+                    / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True)[..., None], eps)
+                )
+                u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * sq
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new_s
+
+        # grads' structure is a prefix of state["f"] (factored dicts hang
+        # below grad leaves), so tree_map passes each factored dict whole.
+        flat = jax.tree_util.tree_map(upd, grads, state["f"])
+        is_pair = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda o: o[0], flat, is_leaf=is_pair)
+        new_f = jax.tree_util.tree_map(lambda o: o[1], flat, is_leaf=is_pair)
+        return updates, {"f": new_f}
+
+    return Optimizer(init, update)

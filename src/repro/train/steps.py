@@ -1,0 +1,240 @@
+"""Train/serve step builders — the functions the launcher jits and shards.
+
+``build_*`` functions close over configs (configs hold dicts and are not
+hashable — never passed as static jit args).  A train step:
+
+    state = {"params": ..., "opt": ..., "step": int32}
+    new_state, metrics = step(state, batch)
+
+Features: microbatch gradient accumulation (``cfg.microbatches``) via
+``lax.scan`` — one gradient all-reduce per *step*, not per microbatch,
+which divides cross-pod (DCI) traffic by the accumulation factor;
+global-norm clipping; optional int8 error-feedback gradient compression
+(``repro.distributed.compression``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import GNNConfig, RecsysConfig, TransformerConfig
+from ..distributed import compression
+from ..models import gnn, sasrec, transformer
+from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+__all__ = [
+    "init_train_state",
+    "make_update_fn",
+    "lm_loss",
+    "build_lm_train_step",
+    "build_lm_prefill_step",
+    "build_lm_decode_step",
+    "build_gnn_train_step",
+    "build_gnn_infer_step",
+    "build_sasrec_train_step",
+]
+
+
+def init_train_state(params, optimizer: Optimizer) -> Dict:
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_update_fn(
+    loss_fn: Callable,              # (params, batch) -> (loss, metrics)
+    optimizer: Optimizer,
+    clip_norm: float = 1.0,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    accum_dtype=None,               # jnp dtype for the accumulation buffer
+    param_axes=None,                # logical-axes tree: constrains grads to
+                                    # the param sharding (reduce-scatter,
+                                    # not all-reduce-then-slice)
+) -> Callable:
+    from ..distributed.sharding import shard as _shard
+
+    def constrain_grads(grads):
+        if param_axes is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda ax, g: _shard(g, *ax),
+            param_axes,
+            grads,
+            is_leaf=lambda a: isinstance(a, tuple)
+            and all(isinstance(e, str) or e is None for e in a),
+        )
+
+    def step(state, batch):
+        params = state["params"]
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            adt = accum_dtype or jnp.float32
+
+            def accum(carry, mb):
+                acc, loss_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g = constrain_grads(g)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(adt), acc, g
+                )
+                return (acc, loss_acc + l), m
+
+            zeros = constrain_grads(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, adt), params
+                )
+            )
+            (gacc, loss_sum), ms = jax.lax.scan(accum, (zeros, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gacc)
+            loss = loss_sum / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+
+        if compress_grads:
+            grads, err = compression.compress_decompress(
+                grads, state.get("grad_err")
+            )
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, new_opt = optimizer.update(
+            grads, state["opt"], params, state["step"]
+        )
+        new_params = apply_updates(params, updates)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if compress_grads:
+            new_state["grad_err"] = err
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch: Dict, cfg: TransformerConfig):
+    logits, _, aux = transformer.forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def build_lm_train_step(
+    cfg: TransformerConfig,
+    optimizer: Optimizer,
+    clip_norm: float = 1.0,
+    compress_grads: bool = False,
+) -> Callable:
+    import jax.numpy as _jnp
+
+    return make_update_fn(
+        lambda p, b: lm_loss(p, b, cfg),
+        optimizer,
+        clip_norm=clip_norm,
+        microbatches=cfg.microbatches,
+        compress_grads=compress_grads,
+        accum_dtype={"float32": _jnp.float32, "bfloat16": _jnp.bfloat16}[
+            cfg.grad_accum_dtype
+        ],
+        param_axes=transformer.logical_axes(cfg),
+    )
+
+
+def build_lm_prefill_step(cfg: TransformerConfig, max_len: int) -> Callable:
+    def prefill(params, tokens):
+        cache = transformer.init_cache(cfg, tokens.shape[0], max_len)
+        logits, cache, _ = transformer.forward(params, tokens, cfg, cache)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def build_lm_decode_step(cfg: TransformerConfig) -> Callable:
+    def decode(params, cache, token):
+        logits, cache, _ = transformer.forward(params, token, cfg, cache)
+        return logits[:, -1], cache
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_loss(params, batch: Dict, cfg: GNNConfig):
+    out = gnn.forward(params, batch["graph"], cfg)
+    target = batch["target"]
+    if target.dtype in (jnp.int32, jnp.int64):  # node classification
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        mask = (target >= 0).astype(jnp.float32)
+        ll = jnp.take_along_axis(logp, jnp.maximum(target, 0)[..., None], -1)[..., 0]
+        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:  # regression
+        err = (out.astype(jnp.float32) - target.astype(jnp.float32)) ** 2
+        if out.ndim == 2 and batch["graph"].graph_ids is None:
+            err = err * batch["graph"].node_mask[:, None].astype(jnp.float32)
+            loss = jnp.sum(err) / jnp.maximum(
+                jnp.sum(batch["graph"].node_mask), 1.0
+            )
+        else:
+            loss = jnp.mean(err)
+    return loss, {"mse_or_ce": loss}
+
+
+def build_gnn_train_step(
+    cfg: GNNConfig, optimizer: Optimizer, clip_norm: float = 1.0
+) -> Callable:
+    return make_update_fn(
+        lambda p, b: gnn_loss(p, b, cfg), optimizer, clip_norm=clip_norm
+    )
+
+
+def build_gnn_infer_step(cfg: GNNConfig) -> Callable:
+    def infer(params, graph):
+        return gnn.forward(params, graph, cfg)
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# SASRec
+# ---------------------------------------------------------------------------
+
+def sasrec_loss(params, batch: Dict, cfg: RecsysConfig):
+    loss = sasrec.train_loss(
+        params, batch["seqs"], batch["pos"], batch["neg"], cfg
+    )
+    return loss, {"bce": loss}
+
+
+def build_sasrec_train_step(
+    cfg: RecsysConfig, optimizer: Optimizer, clip_norm: float = 1.0
+) -> Callable:
+    return make_update_fn(
+        lambda p, b: sasrec_loss(p, b, cfg), optimizer, clip_norm=clip_norm
+    )

@@ -1,0 +1,52 @@
+import os
+import sys
+
+# Allow `pytest tests/` without PYTHONPATH=src (docs still recommend it).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.condensed import BipartiteEdges, Chain, CondensedGraph
+from repro.core.dedup import graph_from_membership
+
+
+def random_membership_graph(n_real, n_virt, avg_size, rng):
+    """Random symmetric single-layer condensed graph (membership sets)."""
+    sets = []
+    for _ in range(n_virt):
+        k = max(2, int(rng.poisson(avg_size)))
+        sets.append(
+            set(rng.choice(n_real, size=min(k, n_real), replace=False).tolist())
+        )
+    return graph_from_membership(n_real, sets)
+
+
+def random_bipartite(n_src, n_dst, n_edges, rng, unique=True):
+    total = n_src * n_dst
+    n_edges = min(n_edges, total)
+    if unique:
+        key = rng.choice(total, size=n_edges, replace=False)
+    else:
+        key = rng.integers(0, total, size=n_edges)
+    return BipartiteEdges(key % n_src, key // n_src, n_src, n_dst)
+
+
+def random_multilayer_graph(n_real, layer_sizes, density, rng):
+    levels = [n_real] + list(layer_sizes) + [n_real]
+    edges = []
+    for a, b in zip(levels, levels[1:]):
+        n_e = max(2, int(a * b * density))
+        edges.append(random_bipartite(a, b, n_e, rng))
+    return CondensedGraph(n_real, [Chain(edges)])
+
+
+def expanded_simple_pairs(g):
+    s, d, m = g.multiplicities()
+    off = s != d
+    return set(zip(s[off].tolist(), d[off].tolist()))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,150 @@
+"""Per-arch smoke tests: reduced configs, one forward/train step on CPU,
+output shapes + finiteness (full configs are exercised only via dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data.graphs import batch_molecules, graph_batch_from_numpy, random_graph, build_triplets
+from repro.models import gnn, sasrec, transformer
+from repro.train import optimizer as opt_lib
+from repro.train import steps
+
+LM_ARCHS = ["glm4-9b", "yi-9b", "llama3-405b", "granite-moe-3b-a800m",
+            "moonshot-v1-16b-a3b"]
+GNN_ARCHS = ["meshgraphnet", "graphcast", "schnet", "dimenet"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_forward_and_train(arch):
+    cfg = registry.get_arch(arch).SMOKE
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    logits, _, aux = transformer.forward(params, toks, cfg)
+    assert logits.shape == (2, 12, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # one train step
+    opt = opt_lib.adamw(1e-3)
+    state = steps.init_train_state(params, opt)
+    step = jax.jit(steps.build_lm_train_step(cfg, opt))
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode_matches_full(arch):
+    cfg = registry.get_arch(arch).SMOKE
+    key = jax.random.PRNGKey(1)
+    params = transformer.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 9), 0, cfg.vocab_size)
+    cache = transformer.init_cache(cfg, 2, 16)
+    _, cache, _ = transformer.forward(params, toks[:, :8], cfg, cache)
+    dec, _, _ = transformer.forward(params, toks[:, 8:9], cfg, cache)
+    full, _, _ = transformer.forward(params, toks, cfg)
+    # MoE top-k can flip under tiny numeric differences; dense must be tight
+    tol = 0.2 if cfg.moe is not None else 2e-2
+    assert float(jnp.abs(dec[:, 0] - full[:, 8]).max()) < tol
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_forward_and_train(arch):
+    cfg = registry.get_arch(arch).SMOKE
+    key = jax.random.PRNGKey(0)
+    if cfg.kind in ("schnet", "dimenet"):
+        g = batch_molecules(4, 8, 20, d_feat=6, seed=1)
+        target = np.random.default_rng(0).standard_normal((4, cfg.d_out)).astype(np.float32)
+    else:
+        src, dst, feats, pos = random_graph(50, 160, 6, seed=1, with_positions=True)
+        g = graph_batch_from_numpy(src, dst, feats, positions=pos)
+        target = np.random.default_rng(0).standard_normal((50, cfg.d_out)).astype(np.float32)
+    params = gnn.init_params(key, cfg, d_in=6)
+    out = gnn.forward(params, g, cfg)
+    assert out.shape == target.shape
+    assert bool(jnp.isfinite(out).all())
+    opt = opt_lib.adamw(1e-3)
+    state = steps.init_train_state(params, opt)
+    step = jax.jit(steps.build_gnn_train_step(cfg, opt))
+    batch = {"graph": g, "target": jnp.asarray(target)}
+    losses = []
+    for _ in range(5):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0], f"{arch} loss did not drop: {losses}"
+
+
+def test_sasrec_smoke():
+    cfg = registry.get_arch("sasrec").SMOKE
+    key = jax.random.PRNGKey(0)
+    params = sasrec.init_params(key, cfg)
+    seqs = jax.random.randint(key, (4, cfg.seq_len), 1, cfg.n_items)
+    opt = opt_lib.adamw(1e-3)
+    state = steps.init_train_state(params, opt)
+    step = jax.jit(steps.build_sasrec_train_step(cfg, opt))
+    batch = {
+        "seqs": seqs,
+        "pos": jnp.roll(seqs, -1, axis=1),
+        "neg": jax.random.randint(jax.random.PRNGKey(1), seqs.shape, 1, cfg.n_items),
+    }
+    losses = []
+    for _ in range(10):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    scores, ids = sasrec.score_all(state["params"], seqs, cfg, top_k=5)
+    assert scores.shape == (4, 5) and bool(jnp.isfinite(scores).all())
+    cand = jax.random.randint(key, (4, 32), 0, cfg.n_items)
+    cs = sasrec.score_candidates(state["params"], seqs, cand, cfg)
+    assert cs.shape == (4, 32)
+
+
+def test_graphgen_paper_smoke():
+    """The paper's own config: condensed PageRank on a small instance."""
+    import numpy as np
+    from repro.configs.graphgen_paper import SMOKE
+    from repro.core import algorithms, dedup, engine
+    from conftest import random_membership_graph
+
+    rng = np.random.default_rng(0)
+    g = random_membership_graph(200, 60, 5, rng)
+    corr = dedup.build_correction(g)
+    dev = engine.to_device(g, correction=corr)
+    pr = algorithms.pagerank(dev, num_iters=SMOKE.pagerank_iters)
+    exp = engine.to_device(g.expand())
+    pr_ref = algorithms.pagerank(exp, num_iters=SMOKE.pagerank_iters)
+    assert np.allclose(np.asarray(pr), np.asarray(pr_ref), atol=1e-6)
+
+
+def test_exact_config_numbers():
+    """The registry carries the exact published configurations."""
+    c = registry.get_arch("glm4-9b").CONFIG
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 2, 13696, 151552)
+    c = registry.get_arch("yi-9b").CONFIG
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 4096, 32, 4, 11008, 64000)
+    c = registry.get_arch("llama3-405b").CONFIG
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    assert 380e9 < c.n_params() < 430e9  # ~405B
+    c = registry.get_arch("granite-moe-3b-a800m").CONFIG
+    assert (c.moe.n_experts, c.moe.top_k, c.d_ff) == (40, 8, 512)
+    c = registry.get_arch("moonshot-v1-16b-a3b").CONFIG
+    assert (c.moe.n_experts, c.moe.top_k, c.vocab_size) == (64, 6, 163840)
+    assert c.n_active_params() < c.n_params() / 3
+    c = registry.get_arch("meshgraphnet").CONFIG
+    assert (c.n_layers, c.d_hidden) == (15, 128)
+    c = registry.get_arch("graphcast").CONFIG
+    assert (c.n_layers, c.d_hidden, c.n_vars) == (16, 512, 227)
+    c = registry.get_arch("schnet").CONFIG
+    assert (c.n_layers, c.d_hidden, c.n_rbf, c.cutoff) == (3, 64, 300, 10.0)
+    c = registry.get_arch("dimenet").CONFIG
+    assert (c.n_layers, c.d_hidden, c.n_bilinear, c.n_spherical,
+            c.n_radial) == (6, 128, 8, 7, 6)
+    c = registry.get_arch("sasrec").CONFIG
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (50, 2, 1, 50)
+    assert len(registry.list_archs(assigned_only=True)) == 10

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_membership_graph, random_multilayer_graph
+
+from repro.core.condensed import BipartiteEdges, Chain, CondensedGraph
+
+
+def test_fig1_coauthor_example():
+    # Paper Figure 1: a1 & a4 share p1 and p2 -> multiplicity 2.
+    ap = np.array([[1, 1], [1, 2], [4, 1], [4, 2], [2, 1], [3, 3], [0, 3]])
+    e_in = BipartiteEdges(ap[:, 0], ap[:, 1], 5, 4)
+    g = CondensedGraph(5, [Chain([e_in, e_in.reversed()])])
+    M = g.expand().adjacency_multiplicity()
+    assert M[1, 4] == 2 and M[4, 1] == 2
+    assert M[1, 2] == 1
+    assert M[0, 3] == 1
+    assert g.duplication_ratio() > 1.0
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        BipartiteEdges(np.array([0, 5]), np.array([0, 0]), 3, 2)  # src oob
+    with pytest.raises(ValueError):
+        Chain([BipartiteEdges(np.array([0]), np.array([0]), 2, 3)])  # 1 level
+    e = BipartiteEdges(np.array([0]), np.array([0]), 2, 3)
+    f = BipartiteEdges(np.array([0]), np.array([0]), 4, 2)
+    with pytest.raises(ValueError):
+        Chain([e, f])  # size mismatch
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_multilayer_expand_matches_matrix_product(seed):
+    rng = np.random.default_rng(seed)
+    n_real = int(rng.integers(3, 12))
+    layers = [int(rng.integers(2, 6)) for _ in range(int(rng.integers(1, 4)))]
+    g = random_multilayer_graph(n_real, layers, 0.3, rng)
+    M = g.expand().adjacency_multiplicity()
+    # oracle: dense chain product
+    levels = [n_real] + layers + [n_real]
+    P = np.eye(n_real, dtype=np.int64)
+    for e in g.chains[0].edges:
+        B = np.zeros((e.n_src, e.n_dst), dtype=np.int64)
+        np.add.at(B, (e.src, e.dst), 1)
+        P = P @ B
+    assert (M == P).all()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_preprocess_preserves_multiplicities(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 25)), int(rng.integers(1, 8)), 3, rng)
+    g2 = g.preprocess()
+    assert (g2.expand().adjacency_multiplicity() == g.expand().adjacency_multiplicity()).all()
+    # step-6 rule removes only cheap virtual nodes
+    assert g2.n_virtual <= g.n_virtual
+
+
+def test_counts_and_bytes():
+    rng = np.random.default_rng(1)
+    g = random_membership_graph(30, 10, 4, rng)
+    assert g.n_edges_condensed == sum(c.n_edges for c in g.chains)
+    assert g.nbytes() > 0
+    assert g.is_single_layer()
+    exp = g.expand()
+    assert exp.n_edges == g.n_edges_expanded()
+    no_self = exp.without_self_loops()
+    assert no_self.n_edges <= exp.n_edges
+    assert (no_self.src != no_self.dst).all()

@@ -1,0 +1,152 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import expanded_simple_pairs, random_membership_graph, random_multilayer_graph
+
+from repro.core import dedup
+
+
+def _pairs_with_self(g):
+    s, d, _ = g.multiplicities()
+    return set(zip(s.tolist(), d.tolist()))
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=60, deadline=None)
+def test_correction_exactness(seed):
+    rng = np.random.default_rng(seed)
+    n_layers = int(rng.integers(1, 4))
+    if n_layers == 1:
+        g = random_membership_graph(int(rng.integers(4, 20)), int(rng.integers(1, 7)), 3, rng)
+    else:
+        g = random_multilayer_graph(int(rng.integers(4, 10)), [3] * n_layers, 0.3, rng)
+    cs, cd, cm = dedup.build_correction(g)
+    M = g.expand().adjacency_multiplicity()
+    D = np.zeros_like(M)
+    np.add.at(D, (cs, cd), cm)
+    A = M - D
+    want = np.minimum(M, 1)
+    np.fill_diagonal(want, 0)
+    assert (A == want).all()
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=50, deadline=None)
+def test_bitmap_algorithms_enumerate_each_pair_once(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 25)), int(rng.integers(1, 8)), 4, rng)
+    want = _pairs_with_self(g)
+    for fn in (dedup.bitmap1, dedup.bitmap2):
+        rep = fn(g)
+        u, v = rep.to_dedup_pairs()
+        pairs = list(zip(u.tolist(), v.tolist()))
+        assert len(pairs) == len(set(pairs)), fn.__name__
+        assert set(pairs) == want, fn.__name__
+
+
+def test_bitmap2_deletes_redundant_edges():
+    # two virtual nodes with identical membership: set cover keeps one.
+    g = dedup.graph_from_membership(6, [{0, 1, 2, 3}, {0, 1, 2, 3}, {4, 5}])
+    b2 = dedup.bitmap2(g)
+    b1 = dedup.bitmap1(g)
+    assert b2.n_bitmaps < b1.n_bitmaps
+    assert b2.nbytes() < b1.nbytes()
+
+
+DEDUP1_FNS = [
+    dedup.dedup1_naive_virtual_first,
+    dedup.dedup1_naive_real_first,
+    dedup.dedup1_greedy_real_first,
+    dedup.dedup1_greedy_virtual_first,
+]
+
+
+@pytest.mark.parametrize("fn", DEDUP1_FNS, ids=lambda f: f.__name__)
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=25, deadline=None)
+def test_dedup1_equivalence_and_uniqueness(fn, seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 22)), int(rng.integers(1, 7)), 4, rng)
+    res = fn(g, rng=np.random.default_rng(seed + 1))
+    # same expanded simple graph
+    assert expanded_simple_pairs(res.graph) == expanded_simple_pairs(g), fn.__name__
+    # multiplicity <= 1 off-diagonal (DEDUP-1 invariant)
+    s, d, m = res.graph.multiplicities()
+    off = s != d
+    assert (m[off] <= 1).all(), fn.__name__
+    assert res.total_edges > 0
+    assert res.seconds >= 0
+
+
+@pytest.mark.parametrize("ordering", ["identity", "random"])
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=25, deadline=None)
+def test_dedup2_invariants(ordering, seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 22)), int(rng.integers(1, 8)), 4, rng)
+    rep = dedup.dedup2_greedy(g, ordering=ordering, rng=np.random.default_rng(seed))
+    mult = rep.pair_multiplicities()
+    want = {p for p in expanded_simple_pairs(g) if p[0] < p[1]}
+    assert set(mult) == want
+    assert all(c == 1 for c in mult.values())
+    # invariants (1)-(3)
+    for i, a in enumerate(rep.sets):
+        for j, b in enumerate(rep.sets):
+            if i < j and (i, j) not in rep.vv_edges:
+                assert len(a & b) <= 1, "invariant 1"
+    for i, j in rep.vv_edges:
+        assert not (rep.sets[i] & rep.sets[j]), "invariant 2"
+
+
+def test_dedup2_compresses_overlapping_cliques():
+    # Fig 6 scenario: two large overlapping cliques.
+    big1 = set(range(0, 12))
+    big2 = set(range(6, 18))
+    g = dedup.graph_from_membership(20, [big1, big2])
+    rep = dedup.dedup2_greedy(g)
+    d1 = dedup.dedup1_greedy_virtual_first(g)
+    # DEDUP-2 should beat DEDUP-1 here (vv-edges vs direct-edge blowup)
+    assert rep.n_edges < d1.total_edges
+
+
+def test_requires_symmetric_single_layer():
+    rng = np.random.default_rng(0)
+    g = random_multilayer_graph(6, [3, 3], 0.4, rng)
+    with pytest.raises(ValueError):
+        dedup.dedup1_greedy_virtual_first(g)
+    assert not dedup.is_symmetric_single_layer(g)
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=20, deadline=None)
+def test_multilayer_collapse_preserves_multiplicities(seed):
+    from repro.core.condensed import collapse_to_single_layer
+
+    rng = np.random.default_rng(seed)
+    g = random_multilayer_graph(int(rng.integers(4, 10)),
+                                [int(rng.integers(2, 5)),
+                                 int(rng.integers(2, 5))], 0.35, rng)
+    flat = collapse_to_single_layer(g, max_growth=1000.0)
+    assert flat.is_single_layer()
+    assert (flat.expand().adjacency_multiplicity()
+            == g.expand().adjacency_multiplicity()).all()
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=20, deadline=None)
+def test_multilayer_bitmap_via_collapse(seed):
+    """Paper §5.2.2: multi-layer dedup = collapse-to-single-layer +
+    single-layer BITMAP; each expanded pair enumerated exactly once."""
+    from repro.core.condensed import collapse_to_single_layer
+
+    rng = np.random.default_rng(seed)
+    g = random_multilayer_graph(int(rng.integers(4, 9)),
+                                [3, int(rng.integers(2, 4))], 0.35, rng)
+    flat = collapse_to_single_layer(g, max_growth=1000.0)
+    rep = dedup.bitmap2(flat)
+    u, v = rep.to_dedup_pairs()
+    pairs = list(zip(u.tolist(), v.tolist()))
+    s0, d0, _ = g.multiplicities()
+    assert len(pairs) == len(set(pairs))
+    assert set(pairs) == set(zip(s0.tolist(), d0.tolist()))

@@ -1,0 +1,110 @@
+"""Cell-builder structure tests (host mesh, no 512-device compile) and a
+subprocess smoke of the real dry-run CLI on the paper's analytics cell."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import registry, shapes
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_host_mesh
+from repro.launch.roofline import model_flops
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_all_cells_enumerates_40():
+    cells = cells_lib.all_cells()
+    assert len(cells) == 40
+    archs = {a for a, _ in cells}
+    assert len(archs) == 10
+
+
+@pytest.mark.parametrize("arch,shape", cells_lib.all_cells())
+def test_cell_builds_structurally(arch, shape):
+    """ShapeDtypeStructs + shardings assemble for every assigned cell."""
+    mesh = make_host_mesh()
+    cell = cells_lib.build_cell(arch, shape, mesh)
+    args_leaves = jax.tree_util.tree_leaves(cell.args)
+    sh_leaves = jax.tree_util.tree_leaves(
+        cell.in_shardings, is_leaf=lambda x: hasattr(x, "spec")
+    )
+    assert args_leaves, (arch, shape)
+    assert all(isinstance(a, jax.ShapeDtypeStruct) for a in args_leaves)
+    assert len(args_leaves) == len(sh_leaves), (arch, shape)
+    assert model_flops(arch, shape) > 0
+
+
+def test_lm_shapes_exact():
+    s = shapes.LM_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+    g = shapes.GNN_SHAPES
+    assert g["full_graph_sm"].raw_nodes == 2708 and g["full_graph_sm"].d_feat == 1433
+    assert g["ogb_products"].raw_edges == 61_859_140
+    assert g["minibatch_lg"].raw_nodes == 1024 + 1024 * 15 + 15360 * 10
+    r = shapes.REC_SHAPES
+    assert r["train_batch"].batch == 65536
+    assert r["retrieval_cand"].n_candidates == 1_000_000
+
+
+@pytest.mark.slow
+def test_dryrun_cli_subprocess():
+    """The real dry-run entry point (512 host devices) on the cheapest cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "graphgen-paper", "--shape", "pagerank", "--mesh", "multi"],
+        capture_output=True, text=True, timeout=900, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "all dry-run cells OK" in proc.stdout
+    out = os.path.join(REPO, "results", "dryrun",
+                       "graphgen-paper__pagerank__multi.json")
+    with open(out) as f:
+        rec = json.load(f)
+    assert rec["ok"] and rec["n_chips"] == 512
+    assert rec["collective_s"] > 0  # sharded segment-sums must communicate
+
+
+def test_hlo_cost_trip_count_linearity():
+    """The loop-aware analyzer must scale flops linearly in scan length
+    (the exact failure mode of XLA's stock cost_analysis)."""
+    import jax.numpy as jnp
+    from repro.launch.hlo_cost import analyze_hlo
+
+    w = jnp.zeros((32, 32))
+
+    def make(n):
+        def f(x):
+            y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
+                                length=n)
+            return y
+        comp = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+        return analyze_hlo(comp.as_text()).flops
+
+    f5, f20 = make(5), make(20)
+    assert 3.5 < f20 / f5 < 4.5, (f5, f20)
+
+
+def test_hlo_cost_collective_split_multi_pod_groups():
+    """Iota replica_groups spanning the pod boundary must count as DCI."""
+    from repro.launch.hlo_cost import _decode_groups
+    import numpy as np
+
+    # pod-axis groups on a (2, 256) layout: {i, i+256}
+    g = _decode_groups("replica_groups=[256,2]<=[2,256]T(1,0)")
+    assert g.shape == (256, 2)
+    assert (g[:, 1] - g[:, 0] == 256).all()
+    crosses = ((g // 256).max(axis=1) != (g // 256).min(axis=1)).any()
+    assert bool(crosses)
+    # within-pod groups: consecutive ids
+    g2 = _decode_groups("replica_groups=[256,2]<=[512]")
+    crosses2 = ((g2 // 256).max(axis=1) != (g2 // 256).min(axis=1)).any()
+    assert not bool(crosses2)

@@ -1,0 +1,82 @@
+import pytest
+
+from repro.core.dsl import ParseError, parse
+
+
+Q1 = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+
+Q2 = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+
+Q3 = """
+Nodes(ID, Name) :- Instructor(ID, Name).
+Nodes(ID, Name) :- Student(ID, Name).
+Edges(ID1, ID2) :- TaughtCourse(ID1, courseId), TookCourse(ID2, courseId).
+"""
+
+
+def test_parse_q1():
+    q = parse(Q1)
+    assert len(q.nodes_rules) == 1 and len(q.edges_rules) == 1
+    e = q.edges_rules[0]
+    assert e.head_vars == ("ID1", "ID2")
+    assert [a.relation for a in e.atoms] == ["AuthorPub", "AuthorPub"]
+    assert e.atoms[0].args == ("ID1", "PubID")
+
+
+def test_parse_q2_multiline():
+    q = parse(Q2)
+    assert len(q.edges_rules[0].atoms) == 4
+
+
+def test_parse_q3_heterogeneous():
+    q = parse(Q3)
+    assert q.heterogeneous
+    assert [r.atoms[0].relation for r in q.nodes_rules] == ["Instructor", "Student"]
+
+
+def test_parse_comparisons_and_constants():
+    q = parse(
+        """
+        Nodes(ID) :- Author(ID, _).
+        Edges(A, B) :- AP(A, P), Pub(P, y, 'CS'), AP(B, P), y >= 2010.
+        """
+    )
+    e = q.edges_rules[0]
+    assert e.comparisons[0].var == "y" and e.comparisons[0].op == ">="
+    pub = e.atoms[1]
+    assert pub.constants == ((2, "CS"),)
+    assert pub.args == ("P", "y", "_")
+    assert q.nodes_rules[0].atoms[0].args == ("ID", "_")
+
+
+def test_parse_comments():
+    q = parse(
+        """
+        # co-author graph
+        Nodes(ID) :- Author(ID, _).  % inline
+        Edges(A, B) :- AP(A, P), AP(B, P).
+        """
+    )
+    assert len(q.edges_rules) == 1
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "Edges(A, B) :- R(A, B).",                      # no Nodes
+        "Nodes(ID) :- R(ID).",                          # no Edges
+        "Nodes(ID) :- .",                               # empty body
+        "Foo(ID) :- R(ID).",                            # bad head
+        "Nodes(ID) :- R(ID). Edges(A) :- R(A, B).",     # Edges arity
+    ],
+)
+def test_parse_errors(bad):
+    with pytest.raises(ParseError):
+        parse(bad)

@@ -1,0 +1,164 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_membership_graph, random_multilayer_graph
+
+from repro.core import algorithms, dedup, engine
+from repro.core.semiring import MIN_PLUS, OR_AND, PLUS_TIMES
+
+
+def _reps(g):
+    """All duplicate-exact device representations of the same graph."""
+    corr = dedup.build_correction(g)
+    reps = {
+        "EXP": engine.to_device(g.expand()),
+        "DEDUP-C": engine.to_device(g, correction=corr),
+    }
+    if dedup.is_symmetric_single_layer(g):
+        d1 = dedup.dedup1_greedy_virtual_first(g)
+        reps["DEDUP-1"] = engine.to_device(d1.graph, deduplicated=True)
+    return reps
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_plus_times_propagate_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 20)), int(rng.integers(1, 6)), 3, rng)
+    A = np.minimum(g.expand().adjacency_multiplicity(), 1).astype(np.float64)
+    np.fill_diagonal(A, 0.0)
+    x = rng.standard_normal(g.n_real).astype(np.float32)
+    want = A.T @ x  # propagate pushes along edges: y[v] = sum_{u->v} x[u]
+    for name, rep in _reps(g).items():
+        got = np.asarray(engine.propagate(rep, x, PLUS_TIMES))
+        assert np.allclose(got, want, atol=1e-3), name
+        got_r = np.asarray(engine.propagate(rep, x, PLUS_TIMES, reverse=True))
+        assert np.allclose(got_r, A @ x, atol=1e-3), f"{name} reverse"
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_cdup_counts_paths_with_multiplicity(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(4, 15)), int(rng.integers(1, 5)), 3, rng)
+    M = g.expand().adjacency_multiplicity().astype(np.float64)
+    np.fill_diagonal(M, 0.0)  # engine drops self loops via diag_mult
+    x = rng.standard_normal(g.n_real).astype(np.float32)
+    rep = engine.to_device(g)  # raw C-DUP
+    got = np.asarray(engine.propagate(rep, x, PLUS_TIMES, allow_duplicates=True))
+    assert np.allclose(got, M.T @ x, atol=1e-3)
+    # and without allow_duplicates it must refuse
+    with pytest.raises(ValueError):
+        engine.propagate(rep, x, PLUS_TIMES)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_algorithms_agree_across_representations(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(5, 18)), int(rng.integers(1, 6)), 3, rng)
+    reps = _reps(g)
+    exp = reps.pop("EXP")
+    deg0 = np.asarray(algorithms.out_degrees(exp))
+    pr0 = np.asarray(algorithms.pagerank(exp, num_iters=15))
+    bfs0 = np.asarray(algorithms.bfs(exp, 0))
+    cc0 = np.asarray(algorithms.connected_components(exp))
+    for name, rep in reps.items():
+        assert np.allclose(np.asarray(algorithms.out_degrees(rep)), deg0, atol=1e-3), name
+        assert np.allclose(np.asarray(algorithms.pagerank(rep, num_iters=15)), pr0, atol=1e-5), name
+        assert np.allclose(np.asarray(algorithms.bfs(rep, 0)), bfs0), name
+        assert np.allclose(np.asarray(algorithms.connected_components(rep)), cc0), name
+    # duplicate-insensitive algorithms also run on raw C-DUP (paper §4.1)
+    cdup = engine.to_device(g)
+    assert np.allclose(np.asarray(algorithms.bfs(cdup, 0)), bfs0)
+    assert np.allclose(np.asarray(algorithms.connected_components(cdup)), cc0)
+    assert np.allclose(np.asarray(algorithms.reachable(cdup, 0)), np.isfinite(bfs0))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_multilayer_idempotent_propagation(seed):
+    rng = np.random.default_rng(seed)
+    n_real = int(rng.integers(4, 12))
+    g = random_multilayer_graph(n_real, [3, 4], 0.3, rng)
+    exp = engine.to_device(g.expand())
+    cdup = engine.to_device(g)
+    bfs_exp = np.asarray(algorithms.bfs(exp, 0))
+    bfs_cdup = np.asarray(algorithms.bfs(cdup, 0))
+    assert np.allclose(bfs_exp, bfs_cdup)
+    corr = dedup.build_correction(g)
+    dc = engine.to_device(g, correction=corr)
+    assert np.allclose(
+        np.asarray(algorithms.pagerank(exp, num_iters=10)),
+        np.asarray(algorithms.pagerank(dc, num_iters=10)),
+        atol=1e-5,
+    )
+
+
+def test_common_neighbor_counts_keeps_duplication_signal():
+    rng = np.random.default_rng(3)
+    g = random_membership_graph(12, 5, 4, rng)
+    rep = engine.to_device(g, drop_self_loops=False)
+    M = g.expand().adjacency_multiplicity()
+    seed_vec = np.zeros(12, dtype=np.float32)
+    seed_vec[0] = 1.0
+    got = np.asarray(algorithms.common_neighbor_counts(rep, seed_vec))
+    assert np.allclose(got, M[0].astype(np.float32))
+
+
+def test_vertex_program_degree():
+    rng = np.random.default_rng(4)
+    g = random_membership_graph(10, 4, 3, rng)
+    corr = dedup.build_correction(g)
+    rep = engine.to_device(g, correction=corr)
+    prog = algorithms.VertexProgram(
+        semiring=PLUS_TIMES,
+        to_message=lambda s: np.float32(1.0) + 0.0 * s,
+        compute=lambda s, m: m,
+    )
+    out = algorithms.vertex_program(rep, prog, np.zeros(10, dtype=np.float32), 3)
+    assert np.allclose(np.asarray(out), np.asarray(algorithms.in_degrees(rep)))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_personalized_pagerank_and_hits_across_reps(seed):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(int(rng.integers(5, 16)), int(rng.integers(1, 6)), 3, rng)
+    reps = _reps(g)
+    exp = reps.pop("EXP")
+    n = g.n_real
+    seeds = np.zeros(n, dtype=np.float32)
+    seeds[0] = 1.0
+    ppr0 = np.asarray(algorithms.personalized_pagerank(exp, seeds, num_iters=15))
+    h0, a0 = algorithms.hits(exp, num_iters=15)
+    for name, rep in reps.items():
+        ppr = np.asarray(algorithms.personalized_pagerank(rep, seeds, num_iters=15))
+        assert np.allclose(ppr, ppr0, atol=1e-5), name
+        h, a = algorithms.hits(rep, num_iters=15)
+        assert np.allclose(np.asarray(h), np.asarray(h0), atol=1e-4), name
+        assert np.allclose(np.asarray(a), np.asarray(a0), atol=1e-4), name
+
+
+def test_serialize_roundtrip_and_export(tmp_path):
+    from repro.core import serialize
+
+    rng = np.random.default_rng(12)
+    g = random_membership_graph(25, 8, 4, rng)
+    g.node_properties["Name"] = np.array([f"n{i}" for i in range(25)])
+    d = str(tmp_path / "graph")
+    serialize.save_condensed(g, d)
+    g2 = serialize.load_condensed(d)
+    assert g2.n_real == g.n_real
+    assert (g2.expand().adjacency_multiplicity()
+            == g.expand().adjacency_multiplicity()).all()
+    assert list(g2.node_properties["Name"]) == list(g.node_properties["Name"])
+    # expanded interchange
+    out = serialize.export_edge_list(g, str(tmp_path / "edges"), fmt="npz")
+    data = np.load(out)
+    exp = g.expand(drop_self_loops=True)
+    assert data["src"].shape == exp.src.shape
+    # saving is atomic: a second save replaces cleanly
+    serialize.save_condensed(g, d)
+    assert serialize.load_condensed(d).n_real == g.n_real

@@ -1,0 +1,58 @@
+"""Examples are part of the public API surface — run them as subprocesses
+(marked slow; the quickstart doubles as the end-to-end extraction test)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script)],
+        capture_output=True, text=True, timeout=timeout, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "verified: condensed == expanded PageRank" in out
+
+
+@pytest.mark.slow
+def test_train_lm_short():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "train_lm.py"),
+         "--steps", "12", "--batch", "2", "--seq", "32",
+         "--checkpoint-dir", "/tmp/test_lm_ckpt"],
+        capture_output=True, text=True, timeout=900, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "done" in proc.stdout
+
+
+@pytest.mark.slow
+def test_serve_lm():
+    out = _run("serve_lm.py")
+    assert "served 7 requests" in out
+
+
+@pytest.mark.slow
+def test_recsys_serve():
+    out = _run("recsys_serve.py")
+    assert "co-interaction graph" in out
+
+
+@pytest.mark.slow
+def test_distributed_analytics_and_recovery():
+    out = _run("graph_analytics_distributed.py", timeout=900)
+    assert "results identical" in out

@@ -1,0 +1,139 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_bipartite
+
+from repro.core.condensed import BipartiteEdges
+from repro.kernels.ops import PackedLayer, bitmap_spmm, condensed_two_hop
+from repro.kernels.pack import TILE, pack_bipartite
+from repro.kernels.ref import bitmap_spmm_ref, two_hop_ref
+
+
+SHAPE_SWEEP = [
+    # (n_src, n_dst, n_edges, feature_dim)
+    (4, 4, 6, 1),
+    (50, 40, 120, 3),
+    (128, 128, 1000, 128),
+    (130, 257, 900, 7),
+    (300, 300, 3000, 64),
+    (513, 200, 4000, 129),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPE_SWEEP)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_bitmap_spmm_shape_dtype_sweep(shape, dtype):
+    n_src, n_dst, n_e, f = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    e = random_bipartite(n_src, n_dst, n_e, rng)
+    layer = PackedLayer.from_edges(e)
+    x = rng.standard_normal((n_src, f)).astype(np.float32)
+    want = bitmap_spmm_ref(layer.bsb, x)
+    got = bitmap_spmm(layer, jnp.asarray(x, dtype=dtype), backend="pallas")
+    tol = 1e-4 if dtype == np.float32 else 0.3
+    assert np.allclose(np.asarray(got, dtype=np.float32), want, atol=tol), (
+        np.abs(np.asarray(got, dtype=np.float32) - want).max()
+    )
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_bitmap_spmm_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n_src = int(rng.integers(2, 300))
+    n_dst = int(rng.integers(2, 300))
+    n_e = int(rng.integers(1, min(n_src * n_dst, 2000)))
+    f = int(rng.integers(1, 40))
+    e = random_bipartite(n_src, n_dst, n_e, rng)
+    layer = PackedLayer.from_edges(e)
+    x = rng.standard_normal((n_src, f)).astype(np.float32)
+    want = bitmap_spmm_ref(layer.bsb, x)
+    got_pl = bitmap_spmm(layer, jnp.asarray(x), backend="pallas")
+    got_xla = bitmap_spmm(layer, jnp.asarray(x), backend="xla")
+    assert np.allclose(np.asarray(got_pl), want, atol=1e-3)
+    assert np.allclose(np.asarray(got_xla), want, atol=1e-3)
+
+
+def test_pack_rejects_duplicates():
+    e = BipartiteEdges(np.array([0, 0]), np.array([1, 1]), 2, 2)
+    with pytest.raises(ValueError):
+        pack_bipartite(e)
+
+
+def test_pack_roundtrip_dense():
+    rng = np.random.default_rng(5)
+    e = random_bipartite(200, 150, 900, rng)
+    bsb = pack_bipartite(e)
+    dense = bsb.to_dense()
+    want = np.zeros((150, 200))
+    want[e.dst, e.src] = 1
+    assert (dense[:150, :200] == want).all()
+    assert dense[150:].sum() == 0 and dense[:, 200:].sum() == 0
+    # compression accounting: bitmaps are 32x smaller than f32 blocks
+    assert bsb.nbytes() < bsb.n_nonzero_blocks * TILE * TILE * 4
+
+
+def test_two_hop_matches_ref():
+    rng = np.random.default_rng(9)
+    e_in = random_bipartite(180, 60, 700, rng)
+    e_out = e_in.reversed()
+    li, lo = PackedLayer.from_edges(e_in), PackedLayer.from_edges(e_out)
+    x = rng.standard_normal((180, 16)).astype(np.float32)
+    got = condensed_two_hop(li, lo, jnp.asarray(x), backend="pallas")
+    want = two_hop_ref(
+        jnp.asarray(e_in.src), jnp.asarray(e_in.dst), 60,
+        jnp.asarray(e_out.src), jnp.asarray(e_out.dst), 180, jnp.asarray(x),
+    )
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_vector_input_squeeze():
+    rng = np.random.default_rng(11)
+    e = random_bipartite(64, 64, 300, rng)
+    layer = PackedLayer.from_edges(e)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = bitmap_spmm(layer, jnp.asarray(x), backend="pallas")
+    assert y.shape == (64,)
+    want = bitmap_spmm_ref(layer.bsb, x[:, None])[:, 0]
+    assert np.allclose(np.asarray(y), want, atol=1e-4)
+
+
+FLASH_SWEEP = [
+    # (B, T, H, KV, D, bq, bkv, causal)
+    (1, 64, 2, 1, 8, 16, 16, True),
+    (2, 128, 4, 2, 16, 32, 64, True),
+    (1, 96, 4, 4, 8, 32, 32, False),
+    (2, 100, 2, 1, 8, 16, 16, True),     # ragged q -> padded
+    (1, 256, 8, 2, 32, 128, 128, True),  # MXU-aligned blocks
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SWEEP)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_pallas_flash_attention_sweep(shape, dtype):
+    import jax
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    B, T, H, KV, D, bq, bkv, causal = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    q = jnp.asarray(rng.standard_normal((B, T, H, D)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, D)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, D)), dtype=dtype)
+
+    def naive(q, k, v):
+        G = H // KV
+        qg = q.astype(jnp.float32).reshape(B, T, KV, G, D)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32))
+        s = s / np.sqrt(D)
+        if causal:
+            mask = jnp.arange(T)[None, :] <= jnp.arange(T)[:, None]
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32)).reshape(B, T, H, D)
+
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=bq, block_kv=bkv)
+    ref = naive(q, k, v)
+    tol = 2e-5 if dtype == np.float32 else 0.05
+    assert float(jnp.abs(out.astype(jnp.float32) - ref).max()) < tol

@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.relational import Catalog, Table, estimate_join_output, hash_join, semi_join
+
+
+def brute_join(lk, rk):
+    out = []
+    for i, a in enumerate(lk):
+        for j, b in enumerate(rk):
+            if a == b:
+                out.append((i, j))
+    return out
+
+
+@given(
+    lk=st.lists(st.integers(0, 8), min_size=0, max_size=30),
+    rk=st.lists(st.integers(0, 8), min_size=0, max_size=30),
+)
+@settings(max_examples=100, deadline=None)
+def test_hash_join_matches_bruteforce(lk, rk):
+    left = Table("L", {"k": np.array(lk, dtype=np.int64), "lv": np.arange(len(lk))})
+    right = Table("R", {"k": np.array(rk, dtype=np.int64), "rv": np.arange(len(rk))})
+    joined = hash_join(left, right, "k", "k")
+    got = sorted(zip(joined.column("lv").tolist(), joined.column("rv").tolist()))
+    assert got == sorted(brute_join(lk, rk))
+    # canonical single key column
+    assert "k" in joined.column_names
+    assert "k_l" not in joined.column_names
+
+
+def test_hash_join_different_key_names():
+    left = Table("L", {"a": np.array([1, 2, 2]), "x": np.array([0, 1, 2])})
+    right = Table("R", {"b": np.array([2, 2, 3]), "y": np.array([5, 6, 7])})
+    j = hash_join(left, right, "a", "b")
+    assert len(j) == 4
+    assert set(j.column_names) == {"a", "x", "b", "y"}
+
+
+def test_semi_join_and_stats():
+    left = Table("L", {"k": np.array([1, 2, 3, 4])})
+    right = Table("R", {"k": np.array([2, 4, 4])})
+    sj = semi_join(left, right, "k", "k")
+    assert sorted(sj.column("k").tolist()) == [2, 4]
+    assert right.stats("k").n_distinct == 2
+    est = estimate_join_output(left, right, "k", "k")
+    assert est == pytest.approx(4 * 3 / 4)
+
+
+def test_table_validation_and_ops():
+    with pytest.raises(ValueError):
+        Table("bad", {"a": np.arange(3), "b": np.arange(4)})
+    t = Table("T", {"a": np.arange(5), "b": np.arange(5) * 2})
+    sel = t.select(lambda c: c["a"] > 2)
+    assert len(sel) == 2
+    proj = t.project(["b"])
+    assert proj.column_names == ["b"]
+    cat = Catalog([t])
+    assert "t" in cat and cat.table("T") is t
+    with pytest.raises(KeyError):
+        cat.table("missing")

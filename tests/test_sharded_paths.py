@@ -1,0 +1,99 @@
+"""Numerical equivalence of the §Perf sharded paths (banded PageRank,
+a2a MoE dispatch) against their single-device baselines.
+
+These run in subprocesses with 8 forced host devices — the main pytest
+process must keep seeing exactly 1 device (smoke-test contract).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+BANDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import algorithms, dedup, engine
+from repro.core.banding import band_partition, make_banded_pagerank
+from repro.data.synth import barabasi_albert_condensed
+
+n_shards = 8
+g = barabasi_albert_condensed(4096, 512, 10.0, 3.0, seed=3)   # 4096 % 8 == 0
+corr = dedup.build_correction(g)
+dev = engine.to_device(g, correction=corr)
+ref = np.asarray(algorithms.pagerank(dev, num_iters=15))
+
+deg = np.asarray(algorithms.out_degrees(dev))
+banded = band_partition(g, corr, n_shards, deg)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+fn = make_banded_pagerank(mesh, ("data", "model"), banded.n_real,
+                          banded.n_virtual, n_shards, iters=15)
+sh = NamedSharding(mesh, P(("data", "model")))
+args = {k: jax.device_put(jnp.asarray(getattr(banded, k)), sh)
+        for k in ("in_src", "in_dst", "out_src", "out_dst",
+                   "corr_src", "corr_dst", "corr_cnt", "deg")}
+got = np.asarray(jax.jit(fn)(args))[: g.n_real]
+d = np.abs(got - ref).max()
+assert d < 1e-7, f"banded mismatch {d}"
+print("BANDED_OK", d)
+"""
+
+A2A_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import use_mesh_rules
+from repro.models import moe as moe_lib
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rules = {"experts": "model", "expert_ff": None, "expert_capacity": None,
+         "embed": None, "batch": "data"}
+cfg_sort = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0,
+                     dispatch="sort")
+cfg_a2a = dataclasses.replace(cfg_sort, dispatch="a2a")
+params = moe_lib.moe_init(jax.random.PRNGKey(0), 16, cfg_sort)
+x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+
+y_ref, m_ref = moe_lib.moe_apply(params, x, cfg_sort)      # no mesh: dense path
+with use_mesh_rules(mesh, rules):
+    xs = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None)))
+    ps = jax.device_put(params, NamedSharding(mesh, P()))
+    y_a2a, m_a2a = jax.jit(
+        lambda p, x: moe_lib.moe_apply(p, x, cfg_a2a)
+    )(ps, xs)
+d = float(jnp.abs(y_a2a - y_ref).max())
+# ample capacity on both sides -> identical routing, tight match
+assert d < 1e-4, f"a2a mismatch {d}"
+assert float(m_a2a["moe_drop_fraction"]) == 0.0
+print("A2A_OK", d)
+"""
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=600, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_banded_pagerank_matches_engine():
+    out = _run(BANDED_SCRIPT)
+    assert "BANDED_OK" in out
+
+
+@pytest.mark.slow
+def test_a2a_moe_matches_dense():
+    out = _run(A2A_SCRIPT)
+    assert "A2A_OK" in out
