@@ -3,14 +3,53 @@
 Degree / PageRank / BFS / connected components on every device
 representation; results are asserted equal across representations before
 timing (correctness is the paper's point, speed the trade-off).
+
+Plus the batched-frontier comparison (DESIGN.md §3): B multi-source
+analyses as one (n, B) propagation vs a per-source Python loop — the
+amortization that makes the condensed representation pay off under
+serving traffic.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithms
 
 from .common import emit, paper_datasets, representations, time_call
+
+BATCH = 16
+
+
+def _batched_vs_looped(name: str, rname: str, rep, n: int) -> list:
+    """Rows for B sources answered batched vs serially."""
+    rows = []
+    sources = np.arange(BATCH, dtype=np.int32) % n
+    srcs_j = jnp.asarray(sources)
+
+    t = time_call(lambda: algorithms.bfs_multi(rep, srcs_j, max_iters=30))
+    rows.append((f"bfs{BATCH}_batched_{name}_{rname}", t * 1e6, f"B={BATCH}"))
+    t = time_call(
+        lambda: [
+            algorithms.bfs(rep, int(s), max_iters=30) for s in sources
+        ]
+    )
+    rows.append((f"bfs{BATCH}_looped_{name}_{rname}", t * 1e6, f"B={BATCH}"))
+
+    seeds = algorithms.one_hot_frontier(n, srcs_j)
+    t = time_call(
+        lambda: algorithms.personalized_pagerank(rep, seeds, num_iters=10)
+    )
+    rows.append((f"ppr{BATCH}_batched_{name}_{rname}", t * 1e6, f"B={BATCH}"))
+    cols = [jnp.asarray(np.asarray(seeds)[:, i]) for i in range(BATCH)]
+    t = time_call(
+        lambda: [
+            algorithms.personalized_pagerank(rep, c, num_iters=10)
+            for c in cols
+        ]
+    )
+    rows.append((f"ppr{BATCH}_looped_{name}_{rname}", t * 1e6, f"B={BATCH}"))
+    return rows
 
 
 def run() -> list:
@@ -37,5 +76,8 @@ def run() -> list:
                 lambda: algorithms.connected_components(rep, max_iters=30)
             )
             rows.append((f"concomp_{name}_{rname}", t * 1e6, ""))
+        # batched multi-source vs per-source loop (serving amortization)
+        n = g.n_real
+        rows.extend(_batched_vs_looped(name, "DEDUP-C", reps["DEDUP-C"], n))
     emit(rows)
     return rows

@@ -1,0 +1,23 @@
+"""Shims over JAX API drift so one codebase runs on the pinned jax.
+
+``shard_map`` is top-level only in newer JAX; on 0.4.x it lives in
+``jax.experimental.shard_map``.  ``jax.lax.pvary`` marks a value as
+varying over manual axes — 0.4.x ``shard_map`` does not track varying
+axes at all, so the identity is the correct stand-in there.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
+try:
+    pvary = jax.lax.pvary
+except AttributeError:
+    def pvary(x, axis_name):
+        return x

@@ -5,6 +5,17 @@ pytree, jit-compatible, and by construction produces identical results on
 EXP / DEDUP-1 / DEDUP-C (duplicate-sensitive) or additionally on raw C-DUP
 (duplicate-insensitive: BFS, connected components, reachability).
 
+**Batched multi-source variants** (DESIGN.md §3): :func:`bfs_multi`,
+:func:`reachable_multi`, :func:`personalized_pagerank` over a seed batch,
+and :func:`common_neighbors_multi` run ``B`` independent analyses as one
+``(n, B)`` frontier through the engine — a single factorized SpMM per
+superstep instead of ``B`` serial traversals, with one *shared*
+vote-to-halt across the batch (supersteps continue while any column is
+still active; finished columns are fixed points of their own updates, so
+extra supersteps cannot change them).  The batch axis carries the
+``graph_batch`` logical axis for mesh sharding
+(:data:`repro.distributed.sharding.GRAPH_RULES`).
+
 The vertex-centric API of the paper maps to :func:`vertex_program`: the
 user supplies ``compute(state, messages) -> state`` and a message semiring;
 supersteps run under ``lax.while_loop`` with a vote-to-halt predicate.
@@ -17,23 +28,56 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..distributed.sharding import shard_frontier
 from .engine import DeviceGraph, propagate
 from .semiring import MIN_PLUS, OR_AND, PLUS_TIMES, Semiring
 
 __all__ = [
+    "n_nodes",
     "out_degrees",
     "in_degrees",
     "pagerank",
     "bfs",
+    "bfs_multi",
     "reachable",
+    "reachable_multi",
     "connected_components",
     "common_neighbor_counts",
+    "common_neighbors_multi",
+    "one_hot_frontier",
+    "personalized_pagerank",
+    "hits",
     "vertex_program",
 ]
 
 
-def _n(graph: DeviceGraph) -> int:
+def n_nodes(graph: DeviceGraph) -> int:
+    """Number of real nodes in any device representation."""
     return graph.n if hasattr(graph, "n") else graph.n_real
+
+
+_n = n_nodes
+
+
+def one_hot_frontier(
+    n: int,
+    sources: jnp.ndarray,
+    value: float = 1.0,
+    fill: float = 0.0,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """``(n, B)`` frontier matrix: column ``i`` is ``fill`` everywhere and
+    ``value`` at ``sources[i]`` (the batched analogue of a one-hot seed).
+
+    Precondition: ``0 <= sources[i] < n``.  Values cannot be checked under
+    jit — JAX scatters silently drop out-of-bounds indices and wrap
+    negative ones, leaving an all-``fill`` column — so validate at the
+    boundary where sources are concrete (as ``GraphQueryServer.submit``
+    does)."""
+    sources = jnp.asarray(sources, dtype=jnp.int32)
+    b = sources.shape[0]
+    x = jnp.full((n, b), fill, dtype=dtype)
+    return x.at[sources, jnp.arange(b)].set(value)
 
 
 # ---------------------------------------------------------------------------
@@ -83,10 +127,31 @@ def pagerank(
 
 @partial(jax.jit, static_argnames=("max_iters",))
 def bfs(graph: DeviceGraph, source: int, max_iters: Optional[int] = None) -> jnp.ndarray:
-    """Hop distances from ``source`` (inf where unreachable)."""
+    """Hop distances from ``source`` (inf where unreachable); the ``B=1``
+    column of :func:`bfs_multi` so there is one relaxation loop to
+    maintain."""
+    srcs = jnp.asarray(source, dtype=jnp.int32).reshape(1)
+    return bfs_multi(graph, srcs, max_iters=max_iters)[:, 0]
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def bfs_multi(
+    graph: DeviceGraph,
+    sources: jnp.ndarray,
+    max_iters: Optional[int] = None,
+) -> jnp.ndarray:
+    """Hop distances from every source at once: ``(n, B)`` for ``(B,)``
+    sources; column ``i`` equals ``bfs(graph, sources[i])``.
+
+    One min-plus SpMM relaxes all ``B`` frontiers per superstep; the
+    vote-to-halt is shared (run while *any* column still changes — settled
+    columns are fixed points, so they are unaffected by extra supersteps).
+    Sources must satisfy ``0 <= sources[i] < n`` (see
+    :func:`one_hot_frontier`).
+    """
     n = _n(graph)
     max_iters = n if max_iters is None else max_iters
-    dist0 = jnp.full((n,), jnp.inf, dtype=jnp.float32).at[source].set(0.0)
+    dist0 = one_hot_frontier(n, sources, value=0.0, fill=jnp.inf)
 
     def cond(state):
         dist, changed, it = state
@@ -96,7 +161,7 @@ def bfs(graph: DeviceGraph, source: int, max_iters: Optional[int] = None) -> jnp
         dist, _, it = state
         relaxed = propagate(graph, dist, MIN_PLUS, hop_weight=1.0)
         new = jnp.minimum(dist, relaxed)
-        return new, jnp.any(new < dist), it + 1
+        return shard_frontier(new), jnp.any(new < dist), it + 1
 
     dist, _, _ = jax.lax.while_loop(cond, body, (dist0, jnp.array(True), 0))
     return dist
@@ -106,10 +171,24 @@ def bfs(graph: DeviceGraph, source: int, max_iters: Optional[int] = None) -> jnp
 def reachable(
     graph: DeviceGraph, source: int, max_iters: Optional[int] = None
 ) -> jnp.ndarray:
-    """Boolean (0/1) reachability from ``source`` under OR-AND."""
+    """Boolean (0/1) reachability from ``source`` under OR-AND; the
+    ``B=1`` column of :func:`reachable_multi`."""
+    srcs = jnp.asarray(source, dtype=jnp.int32).reshape(1)
+    return reachable_multi(graph, srcs, max_iters=max_iters)[:, 0]
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def reachable_multi(
+    graph: DeviceGraph,
+    sources: jnp.ndarray,
+    max_iters: Optional[int] = None,
+) -> jnp.ndarray:
+    """Batched OR-AND reachability: ``(n, B)`` of 0/1 indicators.
+    Sources must satisfy ``0 <= sources[i] < n`` (see
+    :func:`one_hot_frontier`)."""
     n = _n(graph)
     max_iters = n if max_iters is None else max_iters
-    r0 = jnp.zeros((n,), dtype=jnp.float32).at[source].set(1.0)
+    r0 = one_hot_frontier(n, sources, value=1.0, fill=0.0)
 
     def cond(state):
         r, changed, it = state
@@ -118,7 +197,7 @@ def reachable(
     def body(state):
         r, _, it = state
         nxt = jnp.maximum(r, propagate(graph, r, OR_AND))
-        return nxt, jnp.any(nxt > r), it + 1
+        return shard_frontier(nxt), jnp.any(nxt > r), it + 1
 
     r, _, _ = jax.lax.while_loop(cond, body, (r0, jnp.array(True), 0))
     return r
@@ -173,8 +252,25 @@ def common_neighbor_counts(graph: DeviceGraph, seeds: jnp.ndarray) -> jnp.ndarra
 
     On C-DUP this counts shared virtual entities (e.g. #co-authored papers)
     — exactly the quantity dedup would destroy; exposed as a feature.
+    ``seeds`` may also be an ``(n, B)`` indicator batch (one query per
+    column), scored in a single SpMM.
     """
     return propagate(graph, seeds, PLUS_TIMES, allow_duplicates=True)
+
+
+@jax.jit
+def common_neighbors_multi(
+    graph: DeviceGraph, query_nodes: jnp.ndarray
+) -> jnp.ndarray:
+    """Common-neighbor scores for a ``(B,)`` batch of query nodes.
+
+    ``out[v, i]`` = number of shared virtual entities between ``v`` and
+    ``query_nodes[i]`` — the recsys-serving scoring primitive, one
+    propagation for the whole batch.  Query nodes must satisfy
+    ``0 <= query_nodes[i] < n`` (see :func:`one_hot_frontier`).
+    """
+    seeds = one_hot_frontier(_n(graph), query_nodes)
+    return common_neighbor_counts(graph, seeds)
 
 
 # ---------------------------------------------------------------------------
@@ -220,19 +316,26 @@ def vertex_program(
 @partial(jax.jit, static_argnames=("num_iters",))
 def personalized_pagerank(
     graph: DeviceGraph,
-    seeds: jnp.ndarray,            # (n,) restart distribution (sums to 1)
+    seeds: jnp.ndarray,            # (n,) or (n, B) restart distribution(s)
     damping: float = 0.85,
     num_iters: int = 20,
 ) -> jnp.ndarray:
-    """PageRank with restart at ``seeds`` (recommendation-style queries)."""
-    n = _n(graph)
+    """PageRank with restart at ``seeds`` (recommendation-style queries).
+
+    ``seeds`` is one restart distribution ``(n,)`` (columns sum to 1) or a
+    batch ``(n, B)`` — e.g. one one-hot column per user — iterated jointly
+    so each power step is a single SpMM over all ``B`` queries; column
+    ``i`` equals ``personalized_pagerank(graph, seeds[:, i])``.
+    """
     deg = out_degrees(graph)
-    x = seeds.astype(jnp.float32)
+    degb = deg if seeds.ndim == 1 else deg[:, None]
+    seeds = shard_frontier(seeds.astype(jnp.float32))
+    x = seeds
 
     def body(_, x):
-        contrib = jnp.where(deg > 0, x / jnp.maximum(deg, 1.0), 0.0)
+        contrib = jnp.where(degb > 0, x / jnp.maximum(degb, 1.0), 0.0)
         y = propagate(graph, contrib, PLUS_TIMES)
-        dangling = jnp.sum(jnp.where(deg > 0, 0.0, x))
+        dangling = jnp.sum(jnp.where(degb > 0, 0.0, x), axis=0)
         y = y + dangling * seeds
         return (1.0 - damping) * seeds + damping * y
 

@@ -12,8 +12,18 @@ on any representation:
 * ``DeviceCondensed``  — C-DUP / DEDUP-1: one segment-reduce per condensed
   layer (the 2-hop factorized SpMV, ``y = B_out^T (B_in^T x)``); path
   multiplicity is counted by ring semirings and ignored by idempotent ones.
+* ``DevicePacked``     — the same condensed semantics with each layer also
+  carried as a bit-packed block-sparse incidence so batched ring
+  propagation feeds the MXU-aligned Pallas SpMM (DESIGN.md §6).
 * correction structure — DEDUP-C: C-DUP propagation minus a sparse
   correction term makes ring propagation exact without rewriting edges.
+
+**Batched frontiers** (DESIGN.md §3): ``x`` may be a single ``(n,)``
+vector or an ``(n, B)`` matrix of ``B`` independent frontiers (multi-source
+BFS, per-user personalized PageRank, ...).  Every semiring step then runs
+as one factorized SpMM ``Y = B_out^T (B_in^T X)`` — per-column results are
+identical to ``B`` single-vector calls, and the batch axis is annotated
+with the ``graph_batch`` logical axis for mesh sharding.
 
 All arrays are JAX; graph containers are registered pytrees so jitted
 algorithms take them as arguments.
@@ -28,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed.sharding import shard_frontier
 from .condensed import BipartiteEdges, CondensedGraph, ExpandedGraph
 from .semiring import PLUS_TIMES, Semiring, segment_reduce
 
@@ -35,8 +46,11 @@ __all__ = [
     "DeviceBipartite",
     "DeviceExpanded",
     "DeviceCondensed",
+    "DevicePackedLayer",
+    "DevicePacked",
     "DeviceGraph",
     "to_device",
+    "to_device_packed",
     "propagate",
 ]
 
@@ -96,7 +110,60 @@ class DeviceCondensed:
     deduplicated: bool
 
 
-DeviceGraph = Union[DeviceExpanded, DeviceCondensed]
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "blocks", "bitmaps"],
+    meta_fields=["n_src", "n_dst", "n_src_pad", "n_dst_pad"],
+)
+@dataclasses.dataclass
+class DevicePackedLayer:
+    """One condensed layer in both COO and bit-packed block-ELL form.
+
+    ``src``/``dst`` drive the segment-reduce path (any semiring, any
+    direction).  ``blocks``/``bitmaps`` are the dst-major packed incidence
+    (:mod:`repro.kernels.pack`) consumed by the Pallas SpMM for *forward
+    ring* propagation of batched frontiers; ``None`` when the layer is not
+    packable (duplicate edges, e.g. multiplicity-carrying direct edges).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    blocks: Optional[jnp.ndarray]      # (n_rt, max_k) int32
+    bitmaps: Optional[jnp.ndarray]     # (n_rt, max_k, TILE, WORDS) uint32
+    n_src: int
+    n_dst: int
+    n_src_pad: int
+    n_dst_pad: int
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["chains", "direct", "correction", "diag_mult"],
+    meta_fields=["n_real", "deduplicated", "backend", "feature_block"],
+)
+@dataclasses.dataclass
+class DevicePacked:
+    """A :class:`DeviceCondensed` whose layers carry packed SpMM operands.
+
+    Identical propagation semantics; batched (``(n, B)``) forward ring
+    propagation is dispatched to :func:`repro.kernels.bitmap_spmm.
+    bitmap_spmm_pallas` per layer when ``backend`` resolves to Pallas
+    (DESIGN.md §6).  ``backend``: ``'pallas'`` | ``'xla'`` | ``'auto'``
+    (Pallas on TPU when the source feature column fits VMEM, XLA
+    segment-sum otherwise).
+    """
+
+    chains: Tuple[Tuple[DevicePackedLayer, ...], ...]
+    direct: Optional[DevicePackedLayer]
+    correction: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+    diag_mult: Optional[jnp.ndarray]
+    n_real: int
+    deduplicated: bool
+    backend: str
+    feature_block: int
+
+
+DeviceGraph = Union[DeviceExpanded, DeviceCondensed, DevicePacked]
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +250,76 @@ def to_device(
     )
 
 
+def _pack_edges(e: BipartiteEdges, dev: DeviceBipartite) -> DevicePackedLayer:
+    """``dev`` is the already-uploaded COO layer from :func:`to_device`,
+    reused so the edge arrays cross to the device only once."""
+    from ..kernels.pack import TILE, pack_bipartite
+
+    blocks = bitmaps = None
+    n_src_pad = -(-e.n_src // TILE) * TILE
+    n_dst_pad = -(-e.n_dst // TILE) * TILE
+    try:
+        bsb = pack_bipartite(e)
+    except ValueError:
+        bsb = None  # duplicate edges (multiplicity): COO path only
+    if bsb is not None:
+        blocks = jnp.asarray(bsb.blocks)
+        bitmaps = jnp.asarray(bsb.bitmaps)
+        n_src_pad = bsb.n_src_tiles * TILE
+        n_dst_pad = bsb.n_row_tiles * TILE
+    return DevicePackedLayer(
+        src=dev.src,
+        dst=dev.dst,
+        blocks=blocks,
+        bitmaps=bitmaps,
+        n_src=e.n_src,
+        n_dst=e.n_dst,
+        n_src_pad=n_src_pad,
+        n_dst_pad=n_dst_pad,
+    )
+
+
+def to_device_packed(
+    graph: CondensedGraph,
+    correction: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    deduplicated: bool = False,
+    drop_self_loops: bool = True,
+    backend: str = "auto",
+    feature_block: int = 128,
+) -> DevicePacked:
+    """Like :func:`to_device`, additionally packing every condensed layer
+    into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
+    ring propagation runs on the Pallas kernel.  Correction / dedup
+    semantics are identical to :func:`to_device`.
+    """
+    base = to_device(
+        graph,
+        correction=correction,
+        deduplicated=deduplicated,
+        drop_self_loops=drop_self_loops,
+    )
+    assert isinstance(base, DeviceCondensed)
+    chains = tuple(
+        tuple(_pack_edges(e, d) for e, d in zip(c.edges, dc))
+        for c, dc in zip(graph.chains, base.chains)
+    )
+    direct = (
+        _pack_edges(graph.direct, base.direct)
+        if graph.direct is not None
+        else None
+    )
+    return DevicePacked(
+        chains=chains,
+        direct=direct,
+        correction=base.correction,
+        diag_mult=base.diag_mult,
+        n_real=graph.n_real,
+        deduplicated=deduplicated,
+        backend=backend,
+        feature_block=feature_block,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Propagation
 # ---------------------------------------------------------------------------
@@ -202,6 +339,72 @@ def _edge_propagate(
     return segment_reduce(sr, _gather(x, src), dst, n_out)
 
 
+def _kernel_applicable(
+    graph: "DevicePacked",
+    layer: DevicePackedLayer,
+    x: jnp.ndarray,
+    semiring: Semiring,
+    reverse: bool,
+) -> bool:
+    """Static (trace-time) dispatch: batched forward ring steps only.
+
+    The resident-source-column VMEM budget (DESIGN.md §6) is shared with
+    kernels.ops via kernels.pack (imported lazily — the kernels package
+    pulls in the Pallas stack).  The two 'auto' policies intentionally
+    differ in one respect: the engine only selects Pallas on a real TPU
+    (interpret mode is for explicit backend='pallas' testing), while the
+    standalone ops wrapper will run interpret mode anywhere.
+    """
+    if reverse or semiring.name != "plus_times" or x.ndim != 2:
+        return False
+    if layer.blocks is None:
+        return False
+    if graph.backend == "pallas":
+        return True
+    if graph.backend == "xla":
+        return False
+    from ..kernels.pack import fits_vmem_column
+
+    fits = fits_vmem_column(
+        layer.n_src_pad, x.shape[1], graph.feature_block, x.dtype.itemsize
+    )
+    return jax.default_backend() == "tpu" and fits
+
+
+def _packed_layer_spmm(
+    layer: DevicePackedLayer, x: jnp.ndarray, feature_block: int
+) -> jnp.ndarray:
+    """One layer of the factorized SpMM ``Y = B @ X`` on the Pallas kernel."""
+    from ..kernels.bitmap_spmm import bitmap_spmm_pallas
+
+    f = x.shape[1]
+    f_pad = -(-f // feature_block) * feature_block
+    xp = jnp.pad(x, ((0, layer.n_src_pad - x.shape[0]), (0, f_pad - f)))
+    yp = bitmap_spmm_pallas(
+        layer.blocks,
+        layer.bitmaps,
+        xp,
+        n_dst_pad=layer.n_dst_pad,
+        feature_block=feature_block,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return yp[: layer.n_dst, :f]
+
+
+def _layer_propagate(
+    graph: DeviceGraph,
+    sr: Semiring,
+    edges,
+    x: jnp.ndarray,
+    reverse: bool,
+) -> jnp.ndarray:
+    if isinstance(graph, DevicePacked) and _kernel_applicable(
+        graph, edges, x, sr, reverse
+    ):
+        return _packed_layer_spmm(edges, x, graph.feature_block)
+    return _edge_propagate(sr, edges, x, reverse)
+
+
 def _apply_hop(sr: Semiring, y: jnp.ndarray, hop_weight: Optional[float]) -> jnp.ndarray:
     if hop_weight is None:
         return y
@@ -219,18 +422,27 @@ def propagate(
 ) -> jnp.ndarray:
     """One superstep: ⊕-combine ⊗-weighted messages along all edges.
 
-    ``hop_weight`` is applied once per *logical* (real->real) hop, not per
-    condensed layer, so BFS hop counting matches the expanded graph.
+    ``x`` is one frontier ``(n,)`` or a batch of ``B`` frontiers ``(n, B)``
+    processed in a single factorized SpMM; per-column results equal ``B``
+    independent single-frontier calls (DESIGN.md §3).  ``hop_weight`` is
+    applied once per *logical* (real->real) hop, not per condensed layer,
+    so BFS hop counting matches the expanded graph.
     """
+    n_in = graph.n if isinstance(graph, DeviceExpanded) else graph.n_real
+    if x.ndim not in (1, 2) or x.shape[0] != n_in:
+        raise ValueError(
+            f"frontier must be ({n_in},) or ({n_in}, B); got shape {x.shape}"
+        )
+    x = shard_frontier(x)
     if isinstance(graph, DeviceExpanded):
         src, dst = (graph.dst, graph.src) if reverse else (graph.src, graph.dst)
         msgs = _gather(x, src)
         if semiring.name == "plus_times":
             msgs = msgs * _bcast(graph.weight, msgs)
         y = segment_reduce(semiring, msgs, dst, graph.n)
-        return _apply_hop(semiring, y, hop_weight)
+        return shard_frontier(_apply_hop(semiring, y, hop_weight))
 
-    assert isinstance(graph, DeviceCondensed)
+    assert isinstance(graph, (DeviceCondensed, DevicePacked))
     exact = (
         semiring.idempotent
         or graph.deduplicated
@@ -248,11 +460,11 @@ def propagate(
         seq: Sequence[DeviceBipartite] = chain[::-1] if reverse else chain
         h = x
         for e in seq:
-            h = _edge_propagate(semiring, e, h, reverse)
+            h = _layer_propagate(graph, semiring, e, h, reverse)
         h = _apply_hop(semiring, h, hop_weight)
         y = h if y is None else semiring.add(y, h)
     if graph.direct is not None:
-        h = _edge_propagate(semiring, graph.direct, x, reverse)
+        h = _layer_propagate(graph, semiring, graph.direct, x, reverse)
         h = _apply_hop(semiring, h, hop_weight)
         y = h if y is None else semiring.add(y, h)
     if y is None:
@@ -274,7 +486,7 @@ def propagate(
             y = y - _apply_hop(
                 semiring, x * _bcast(graph.diag_mult, x), hop_weight
             )
-    return y
+    return shard_frontier(y)
 
 
 def _bcast(w: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:

@@ -29,7 +29,19 @@ __all__ = [
     "named_sharding",
     "specs_for_tree",
     "current_mesh",
+    "GRAPH_RULES",
+    "shard_frontier",
 ]
+
+# Logical-axis rules for the condensed-graph engine (DESIGN.md §3/§5):
+# frontier matrices are (graph_nodes, graph_batch); the *batch* axis is the
+# data-parallel one — every device holds the full node axis (edge arrays
+# are replicated or banded separately) and owns a slice of the sources.
+# Activate with ``use_mesh_rules(mesh, GRAPH_RULES)`` around jitted calls.
+GRAPH_RULES = {
+    "graph_nodes": None,
+    "graph_batch": ("data", "model"),
+}
 
 _state = threading.local()
 
@@ -120,6 +132,20 @@ def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
     spec = _dedup_axes(logical_spec(logical_axes, rules, mesh))
     ns = NamedSharding(mesh, spec)
     return jax.lax.with_sharding_constraint(x, ns)
+
+
+def shard_frontier(x: jax.Array) -> jax.Array:
+    """Annotate a propagation frontier: ``(n,)`` vector or ``(n, B)`` batch.
+
+    The same engine code then runs unconstrained on one CPU device and
+    batch-sharded under ``use_mesh_rules(mesh, GRAPH_RULES)`` (rules may
+    remap the logical names per deployment).  No-op outside a mesh context.
+    """
+    if x.ndim == 1:
+        return shard(x, "graph_nodes")
+    if x.ndim == 2:
+        return shard(x, "graph_nodes", "graph_batch")
+    raise ValueError(f"frontier must be (n,) or (n, B); got rank {x.ndim}")
 
 
 def specs_for_tree(axes_tree, rules: Mapping, mesh: Mesh):

@@ -19,14 +19,11 @@ import numpy as np
 
 from ..core.condensed import BipartiteEdges
 from .bitmap_spmm import bitmap_spmm_pallas
-from .pack import TILE, BlockSparseBitmap, pack_bipartite
+from .pack import TILE, BlockSparseBitmap, fits_vmem_column, pack_bipartite
 from .ref import segment_spmm_ref
 
 __all__ = ["PackedLayer", "pack_layer", "bitmap_spmm", "condensed_two_hop"]
 
-# VMEM budget for the in-kernel source column (bytes); half of a v5e's
-# 128 MiB VMEM? No — v5e VMEM is ~128KiB*... practical budget: 8 MiB.
-_VMEM_COLUMN_BUDGET = 8 * 2**20
 
 
 @dataclasses.dataclass
@@ -78,7 +75,9 @@ def bitmap_spmm(
     n_src_pad = -(-layer.n_src // TILE) * TILE
     f_pad = -(-x.shape[1] // feature_block) * feature_block
     if backend == "auto":
-        fits = n_src_pad * f_pad * x.dtype.itemsize <= _VMEM_COLUMN_BUDGET
+        fits = fits_vmem_column(
+            n_src_pad, x.shape[1], feature_block, x.dtype.itemsize
+        )
         backend = "pallas" if fits else "xla"
     if backend == "xla":
         y = segment_spmm_ref(layer.src, layer.dst, x, layer.n_dst)

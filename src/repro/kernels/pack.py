@@ -25,6 +25,21 @@ from ..core.condensed import BipartiteEdges
 TILE = 128
 WORDS = TILE // 32
 
+# VMEM budget for the kernel's resident source column (bytes); practical
+# budget 8 MiB.  Lives here (numpy-only module) so both auto-dispatchers
+# (kernels.ops.bitmap_spmm and core.engine) share it without the engine
+# importing the Pallas stack.
+_VMEM_COLUMN_BUDGET = 8 * 2**20
+
+
+def fits_vmem_column(
+    n_src_pad: int, n_features: int, feature_block: int, itemsize: int
+) -> bool:
+    """Whether the kernel's resident source column fits the VMEM budget —
+    the one fits formula both auto-dispatchers must agree on."""
+    f_pad = -(-n_features // feature_block) * feature_block
+    return n_src_pad * f_pad * itemsize <= _VMEM_COLUMN_BUDGET
+
 __all__ = ["BlockSparseBitmap", "pack_bipartite", "TILE", "WORDS"]
 
 

@@ -42,6 +42,8 @@ def run_cell(arch: str, shape: str, mesh_name: str, verbose: bool = True,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     mem_stats = {
         "argument_bytes": mem.argument_size_in_bytes,
         "output_bytes": mem.output_size_in_bytes,

@@ -1,1 +1,5 @@
-"""Serving substrate: KV-cache serving loop and request batching."""
+"""Serving substrate: KV-cache serving loop, graph-analytics micro-batching,
+and request batching."""
+from .server import BatchedServer, GraphQuery, GraphQueryServer, Request
+
+__all__ = ["BatchedServer", "GraphQuery", "GraphQueryServer", "Request"]

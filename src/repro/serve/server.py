@@ -1,10 +1,17 @@
-"""Batched LM serving loop: continuous prefill + decode over a KV cache.
+"""Batched serving loops: LM decode over a KV cache, and graph analytics
+over a condensed graph.
 
-A deliberately compact production shape: fixed-slot batch, each slot an
-independent request; prefill admits new requests into free slots; decode
-advances all active slots one token per step.  (Slot-level batching is
-the scheduling core of vLLM-style serving; paging is out of scope for a
-CPU container and noted in DESIGN.md.)
+Two deliberately compact production shapes:
+
+* :class:`BatchedServer` — fixed-slot LM batch, each slot an independent
+  request; prefill admits new requests into free slots; decode advances
+  all active slots one token per step.  (Slot-level batching is the
+  scheduling core of vLLM-style serving; paging is out of scope for a
+  CPU container and noted in DESIGN.md §5.)
+* :class:`GraphQueryServer` — micro-batching front-end for multi-source
+  graph analytics (DESIGN.md §3/§5): queued per-node queries of the same
+  kind are fused into one ``(n, B)`` frontier and answered by a single
+  batched propagation call instead of ``B`` serial traversals.
 """
 from __future__ import annotations
 
@@ -16,9 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import TransformerConfig
-from ..models import transformer
+from ..core import algorithms
+from ..core.engine import DeviceGraph
 
-__all__ = ["Request", "BatchedServer"]
+# The LM stack is only needed by BatchedServer; it is imported inside its
+# methods (cached by sys.modules) so graph-analytics users of this module
+# don't pay for (or depend on) it.
+
+__all__ = ["Request", "BatchedServer", "GraphQuery", "GraphQueryServer"]
 
 
 @dataclasses.dataclass
@@ -40,6 +52,8 @@ class BatchedServer:
         batch_slots: int = 4,
         max_len: int = 256,
     ):
+        from ..models import transformer
+
         self.params = params
         self.cfg = cfg
         self.slots: List[Optional[Request]] = [None] * batch_slots
@@ -61,6 +75,8 @@ class BatchedServer:
 
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot (one slot at a time demo)."""
+        from ..models import transformer
+
         slot = self._free_slot()
         if slot is None:
             return False
@@ -83,6 +99,8 @@ class BatchedServer:
 
     def step(self) -> None:
         """One decode step for every active slot."""
+        from ..models import transformer
+
         if all(s is None for s in self.slots):
             return
         tokens = np.zeros((len(self.slots), 1), dtype=np.int32)
@@ -123,3 +141,134 @@ class BatchedServer:
         for r in requests:
             out.setdefault(r.rid, r.generated)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Graph-analytics serving: fuse queued queries into one batched propagation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GraphQuery:
+    """One node-seeded analytics request.
+
+    ``kind``: ``'bfs'`` (hop distances), ``'ppr'`` (personalized PageRank
+    from a one-hot restart at ``node``), or ``'common_neighbors'``
+    (path-multiplicity scores — the recsys scoring primitive; needs a
+    duplicate-counting graph, e.g. raw C-DUP kept with self loops).
+    """
+
+    qid: int
+    kind: str
+    node: int
+
+
+class GraphQueryServer:
+    """Micro-batching graph-analytics server over one device graph.
+
+    Incoming queries are queued with :meth:`submit`; :meth:`flush` groups
+    them by kind, packs up to ``max_batch`` sources into one ``(n, B)``
+    frontier, and answers the whole group with a single batched algorithm
+    call (:func:`~repro.core.algorithms.bfs_multi` & friends).  Amortizing
+    the graph traversal over the batch is the serving-side payoff of the
+    condensed representation: extract once, answer many (paper §6.1.3).
+    """
+
+    def __init__(
+        self,
+        graph: DeviceGraph,
+        max_batch: int = 32,
+        ppr_iters: int = 20,
+        damping: float = 0.85,
+        bfs_max_iters: Optional[int] = None,
+        counts_graph: Optional[DeviceGraph] = None,
+    ):
+        """``graph`` must be duplicate-exact (EXP / DEDUP-C / DEDUP-1) for
+        ``'ppr'`` queries; ``'common_neighbors'`` queries are answered from
+        ``counts_graph`` (a raw C-DUP, typically kept *with* self loops so
+        the multiplicity signal survives), defaulting to ``graph``."""
+        self.graph = graph
+        self.counts_graph = counts_graph if counts_graph is not None else graph
+        self.max_batch = int(max_batch)
+        self.ppr_iters = int(ppr_iters)
+        self.damping = float(damping)
+        self.bfs_max_iters = bfs_max_iters
+        self.pending: List[GraphQuery] = []
+        self._pending_qids: set = set()
+        # served-traffic accounting (asserted in tests, shown in examples)
+        self.n_queries = 0
+        self.n_propagation_batches = 0
+
+    def _validate(self, query: GraphQuery, extra_qids: set) -> None:
+        if query.kind not in ("bfs", "ppr", "common_neighbors"):
+            raise ValueError(f"unknown query kind {query.kind!r}")
+        if query.qid in self._pending_qids or query.qid in extra_qids:
+            raise ValueError(
+                f"qid {query.qid} already pending; answers are keyed by qid"
+            )
+        # JAX scatters silently drop out-of-bounds indices (and wrap
+        # negative ones), which would serve a confidently wrong answer.
+        target = (
+            self.counts_graph if query.kind == "common_neighbors" else self.graph
+        )
+        n = algorithms.n_nodes(target)
+        if not 0 <= query.node < n:
+            raise ValueError(
+                f"node {query.node} out of range for graph with {n} nodes"
+            )
+
+    def submit(self, query: GraphQuery) -> None:
+        self._validate(query, set())
+        self.pending.append(query)
+        self._pending_qids.add(query.qid)
+
+    def _answer_group(
+        self, kind: str, group: List[GraphQuery]
+    ) -> Dict[int, np.ndarray]:
+        sources = jnp.asarray([q.node for q in group], dtype=jnp.int32)
+        if kind == "bfs":
+            res = algorithms.bfs_multi(
+                self.graph, sources, max_iters=self.bfs_max_iters
+            )
+        elif kind == "ppr":
+            n = algorithms.n_nodes(self.graph)
+            seeds = algorithms.one_hot_frontier(n, sources)
+            res = algorithms.personalized_pagerank(
+                self.graph, seeds, damping=self.damping,
+                num_iters=self.ppr_iters,
+            )
+        else:  # common_neighbors
+            res = algorithms.common_neighbors_multi(self.counts_graph, sources)
+        res = np.asarray(res)
+        return {q.qid: res[:, i] for i, q in enumerate(group)}
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Answer everything queued; returns ``{qid: (n,) result}``."""
+        out: Dict[int, np.ndarray] = {}
+        by_kind: Dict[str, List[GraphQuery]] = {}
+        for q in self.pending:
+            by_kind.setdefault(q.kind, []).append(q)
+        n_batches = 0
+        for kind, group in by_kind.items():
+            for i in range(0, len(group), self.max_batch):
+                out.update(self._answer_group(kind, group[i : i + self.max_batch]))
+                n_batches += 1
+        # queue and counters committed only once every group answered, so
+        # a failure mid-flush leaves pending intact and counts unchanged
+        # for a retry
+        self.n_propagation_batches += n_batches
+        self.n_queries += len(self.pending)
+        self.pending = []
+        self._pending_qids = set()
+        return out
+
+    def run(self, queries: List[GraphQuery]) -> Dict[int, np.ndarray]:
+        # validate the whole batch before enqueuing any of it, so a bad
+        # query can't leave earlier ones orphaned in the queue
+        seen: set = set()
+        for q in queries:
+            self._validate(q, seen)
+            seen.add(q.qid)
+        for q in queries:
+            self.pending.append(q)
+            self._pending_qids.add(q.qid)
+        return self.flush()

@@ -1,11 +1,80 @@
 import os
 import sys
+import types
 
 # Allow `pytest tests/` without PYTHONPATH=src (docs still recommend it).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: `hypothesis` is not installable in the offline
+# container.  When absent, install a stub into sys.modules *before* test
+# modules import it, so each module still collects; property-based tests
+# (anything decorated with the stub `@given`) skip at runtime while the
+# plain tests in the same module run normally.
+# ---------------------------------------------------------------------------
+
+try:  # pragma: no cover - trivial branch
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+
+    class _Anything:
+        """Stands in for strategy objects; inert under any fluent call."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*strategy_args, **strategy_kwargs):
+        """Replace the test with a skipper whose signature drops the
+        strategy-filled arguments (so ``@pytest.mark.parametrize`` stacked
+        outside ``@given`` keeps working).  Positional strategies fill the
+        *rightmost* parameters (hypothesis semantics), keyword strategies
+        fill by name."""
+
+        def deco(fn):
+            import functools
+            import inspect
+
+            @functools.wraps(fn)
+            def skipped(*a, **k):
+                pytest.skip("hypothesis not installed")
+
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if strategy_args:
+                params = params[: len(params) - len(strategy_args)]
+            kept = [p for p in params if p.name not in strategy_kwargs]
+            skipped.__signature__ = sig.replace(parameters=kept)
+            return skipped
+
+        return deco
+
+    def _identity_decorator(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _identity_decorator
+    _stub.assume = lambda *a, **k: True
+    _stub.note = lambda *a, **k: None
+    _stub.HealthCheck = _Anything()
+    _strategies = types.ModuleType("hypothesis.strategies")
+
+    def _strategies_getattr(name):
+        return _Anything()
+
+    _strategies.__getattr__ = _strategies_getattr
+    _stub.strategies = _strategies
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _strategies
 
 from repro.core.condensed import BipartiteEdges, Chain, CondensedGraph
 from repro.core.dedup import graph_from_membership

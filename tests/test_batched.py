@@ -1,0 +1,297 @@
+"""Batched multi-source propagation (DESIGN.md §3).
+
+The core contract: ``propagate(graph, X)[:, i] == propagate(graph, X[:, i])``
+for every column, on every representation, under ring and idempotent
+semirings — so all batched algorithms inherit single-source semantics.
+
+Seeded-parametrize property tests (not hypothesis-based: these must run in
+the offline container too).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import random_membership_graph, random_multilayer_graph
+
+from repro.core import algorithms, dedup, engine
+from repro.core.semiring import MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES
+from repro.serve import GraphQuery, GraphQueryServer
+
+SEEDS = [0, 1, 7, 23]
+B = 5
+
+
+def _graph(seed):
+    rng = np.random.default_rng(seed)
+    return random_membership_graph(
+        int(rng.integers(8, 40)), int(rng.integers(2, 10)), 4, rng
+    ), rng
+
+
+def _exact_reps(g):
+    corr = dedup.build_correction(g)
+    return {
+        "EXP": engine.to_device(g.expand()),
+        "DEDUP-C": engine.to_device(g, correction=corr),
+        "PACKED": engine.to_device_packed(g, correction=corr, backend="pallas"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Column-equivalence property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_ring_matrix_propagate_matches_columns(seed):
+    """plus-times: (n, B) == B single-vector calls, on every exact rep and
+    on raw C-DUP (allow_duplicates), forward and reverse."""
+    g, rng = _graph(seed)
+    X = rng.standard_normal((g.n_real, B)).astype(np.float32)
+    reps = _exact_reps(g)
+    for name, rep in reps.items():
+        for reverse in (False, True):
+            Y = np.asarray(
+                engine.propagate(rep, jnp.asarray(X), PLUS_TIMES, reverse=reverse)
+            )
+            for i in range(B):
+                yi = np.asarray(
+                    engine.propagate(
+                        rep, jnp.asarray(X[:, i]), PLUS_TIMES, reverse=reverse
+                    )
+                )
+                assert np.allclose(Y[:, i], yi, atol=1e-4), (name, reverse, i)
+    cdup = engine.to_device(g)
+    Y = np.asarray(
+        engine.propagate(cdup, jnp.asarray(X), PLUS_TIMES, allow_duplicates=True)
+    )
+    for i in range(B):
+        yi = np.asarray(
+            engine.propagate(
+                cdup, jnp.asarray(X[:, i]), PLUS_TIMES, allow_duplicates=True
+            )
+        )
+        assert np.allclose(Y[:, i], yi, atol=1e-4), i
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize(
+    "semiring", [MIN_PLUS, MAX_TIMES, OR_AND], ids=lambda s: s.name
+)
+def test_idempotent_matrix_propagate_matches_columns(seed, semiring):
+    """Idempotent semirings run on raw C-DUP directly; batched == looped."""
+    g, rng = _graph(seed)
+    if semiring is MIN_PLUS:
+        X = np.where(
+            rng.random((g.n_real, B)) < 0.3,
+            rng.random((g.n_real, B)),
+            np.inf,
+        ).astype(np.float32)
+    else:
+        X = (rng.random((g.n_real, B)) < 0.4).astype(np.float32)
+    for rep in (engine.to_device(g), engine.to_device(g.expand())):
+        Y = np.asarray(engine.propagate(rep, jnp.asarray(X), semiring))
+        for i in range(B):
+            yi = np.asarray(engine.propagate(rep, jnp.asarray(X[:, i]), semiring))
+            assert np.allclose(Y[:, i], yi), i
+
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_multilayer_matrix_propagate_matches_columns(seed):
+    rng = np.random.default_rng(seed)
+    g = random_multilayer_graph(int(rng.integers(10, 25)), [5, 4], 0.2, rng)
+    corr = dedup.build_correction(g)
+    X = rng.standard_normal((g.n_real, B)).astype(np.float32)
+    for rep in (
+        engine.to_device(g, correction=corr),
+        engine.to_device_packed(g, correction=corr, backend="pallas"),
+        engine.to_device(g.expand()),
+    ):
+        Y = np.asarray(engine.propagate(rep, jnp.asarray(X), PLUS_TIMES))
+        for i in range(B):
+            yi = np.asarray(engine.propagate(rep, jnp.asarray(X[:, i]), PLUS_TIMES))
+            assert np.allclose(Y[:, i], yi, atol=1e-4), i
+
+
+def test_propagate_rejects_bad_frontier_shapes():
+    g, rng = _graph(0)
+    rep = engine.to_device(g.expand())
+    with pytest.raises(ValueError):
+        engine.propagate(rep, jnp.zeros((g.n_real + 1,)), PLUS_TIMES)
+    with pytest.raises(ValueError):
+        engine.propagate(rep, jnp.zeros((3, g.n_real)), PLUS_TIMES)
+    with pytest.raises(ValueError):
+        engine.propagate(rep, jnp.zeros((g.n_real, 2, 2)), PLUS_TIMES)
+
+
+# ---------------------------------------------------------------------------
+# Packed representation: kernel path == XLA path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_packed_backends_agree(seed):
+    g, rng = _graph(seed)
+    corr = dedup.build_correction(g)
+    X = jnp.asarray(rng.standard_normal((g.n_real, 3)).astype(np.float32))
+    y_pl = engine.propagate(
+        engine.to_device_packed(g, correction=corr, backend="pallas"), X
+    )
+    y_xla = engine.propagate(
+        engine.to_device_packed(g, correction=corr, backend="xla"), X
+    )
+    y_ref = engine.propagate(engine.to_device(g, correction=corr), X)
+    assert np.allclose(np.asarray(y_pl), np.asarray(y_ref), atol=1e-4)
+    assert np.allclose(np.asarray(y_xla), np.asarray(y_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched algorithms == their single-source counterparts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_bfs_and_reachable_multi_match_single(seed):
+    g, rng = _graph(seed)
+    n = g.n_real
+    sources = rng.integers(0, n, size=4)
+    for rep in (engine.to_device(g), engine.to_device(g.expand())):
+        D = np.asarray(algorithms.bfs_multi(rep, jnp.asarray(sources)))
+        R = np.asarray(algorithms.reachable_multi(rep, jnp.asarray(sources)))
+        for i, s in enumerate(sources.tolist()):
+            assert np.allclose(D[:, i], np.asarray(algorithms.bfs(rep, s))), i
+            assert np.allclose(
+                R[:, i], np.asarray(algorithms.reachable(rep, s))
+            ), i
+
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_personalized_pagerank_batch_matches_single(seed):
+    g, rng = _graph(seed)
+    n = g.n_real
+    sources = rng.integers(0, n, size=4)
+    reps = _exact_reps(g)
+    seeds = algorithms.one_hot_frontier(n, jnp.asarray(sources))
+    ref = None
+    for name, rep in reps.items():
+        P = np.asarray(algorithms.personalized_pagerank(rep, seeds, num_iters=12))
+        for i in range(len(sources)):
+            p1 = np.asarray(
+                algorithms.personalized_pagerank(rep, seeds[:, i], num_iters=12)
+            )
+            assert np.allclose(P[:, i], p1, atol=1e-5), (name, i)
+        if ref is None:
+            ref = P
+        assert np.allclose(P, ref, atol=1e-4), name
+
+
+def test_common_neighbors_multi_counts_multiplicity():
+    rng = np.random.default_rng(3)
+    g = random_membership_graph(20, 8, 4, rng)
+    rep = engine.to_device(g, drop_self_loops=False)
+    M = g.expand().adjacency_multiplicity()
+    nodes = np.array([0, 5, 11])
+    C = np.asarray(algorithms.common_neighbors_multi(rep, jnp.asarray(nodes)))
+    for i, s in enumerate(nodes.tolist()):
+        assert np.allclose(C[:, i], M[s].astype(np.float32)), i
+
+
+def test_one_hot_frontier_shape_and_values():
+    x = np.asarray(algorithms.one_hot_frontier(6, jnp.asarray([2, 2, 5]),
+                                               value=0.0, fill=np.inf))
+    assert x.shape == (6, 3)
+    assert x[2, 0] == 0.0 and x[2, 1] == 0.0 and x[5, 2] == 0.0
+    assert np.isinf(x).sum() == 15
+
+
+# ---------------------------------------------------------------------------
+# Serving: queued queries fused into batched propagation calls
+# ---------------------------------------------------------------------------
+
+def test_graph_query_server_batches_and_answers():
+    rng = np.random.default_rng(9)
+    g = random_membership_graph(30, 10, 4, rng)
+    corr = dedup.build_correction(g)
+    server = GraphQueryServer(
+        engine.to_device(g, correction=corr),
+        counts_graph=engine.to_device(g, drop_self_loops=False),
+        max_batch=4,
+    )
+    queries = [GraphQuery(i, "bfs", int(i % 30)) for i in range(6)]
+    queries += [GraphQuery(50 + i, "ppr", int(3 * i % 30)) for i in range(3)]
+    queries += [
+        GraphQuery(90 + i, "common_neighbors", int(5 * i % 30)) for i in range(2)
+    ]
+    answers = server.run(queries)
+    # 6 bfs / cap 4 -> 2 batches; 3 ppr -> 1; 2 cn -> 1
+    assert server.n_queries == 11
+    assert server.n_propagation_batches == 4
+    assert set(answers) == {q.qid for q in queries}
+    assert np.allclose(
+        answers[0], np.asarray(algorithms.bfs(server.graph, 0))
+    )
+    seeds = np.zeros(30, np.float32)
+    seeds[3] = 1.0
+    assert np.allclose(
+        answers[51],
+        np.asarray(
+            algorithms.personalized_pagerank(server.graph, jnp.asarray(seeds))
+        ),
+        atol=1e-6,
+    )
+    ind = np.zeros(30, np.float32)
+    ind[5] = 1.0
+    assert np.allclose(
+        answers[91],
+        np.asarray(
+            algorithms.common_neighbor_counts(server.counts_graph, jnp.asarray(ind))
+        ),
+    )
+    with pytest.raises(ValueError):
+        server.submit(GraphQuery(999, "triangle_count", 0))
+    # out-of-range nodes must be rejected at submit time: JAX scatters
+    # silently drop/wrap bad indices, which would serve a wrong answer
+    with pytest.raises(ValueError):
+        server.submit(GraphQuery(998, "bfs", 30))
+    with pytest.raises(ValueError):
+        server.submit(GraphQuery(997, "ppr", -1))
+    # answers are keyed by qid, so a pending duplicate would be overwritten
+    server.submit(GraphQuery(996, "bfs", 1))
+    with pytest.raises(ValueError):
+        server.submit(GraphQuery(996, "ppr", 2))
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules: logical batch axis resolves, engine is mesh-agnostic
+# ---------------------------------------------------------------------------
+
+def test_graph_rules_resolve_batch_axis():
+    import jax
+    from jax.sharding import PartitionSpec
+
+    from repro.distributed import sharding
+
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = sharding.logical_spec(
+        ["graph_nodes", "graph_batch"], sharding.GRAPH_RULES, mesh
+    )
+    assert spec == PartitionSpec(None, ("data",))
+    # outside any mesh context the annotation is a no-op
+    x = jnp.ones((4, 2))
+    assert sharding.shard_frontier(x) is x
+    with pytest.raises(ValueError):
+        sharding.shard_frontier(jnp.ones((2, 2, 2)))
+
+
+def test_algorithms_run_under_mesh_rules():
+    import jax
+
+    from repro.distributed.sharding import GRAPH_RULES, use_mesh_rules
+
+    rng = np.random.default_rng(11)
+    g = random_membership_graph(24, 8, 4, rng)
+    cdup = engine.to_device(g)
+    sources = jnp.asarray([0, 5, 9])
+    ref = np.asarray(algorithms.bfs_multi(cdup, sources))
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    with use_mesh_rules(mesh, GRAPH_RULES):
+        got = np.asarray(algorithms.bfs_multi(cdup, sources))
+    assert np.allclose(got, ref)
