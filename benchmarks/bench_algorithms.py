@@ -52,9 +52,9 @@ def _batched_vs_looped(name: str, rname: str, rep, n: int) -> list:
     return rows
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    for name, g in paper_datasets(scale=0.2).items():
+    for name, g in paper_datasets(scale=0.04 if smoke else 0.2).items():
         reps = representations(g)
         # correctness gate (duplicate-sensitive algos skip raw C-DUP)
         ref = np.asarray(algorithms.pagerank(reps["EXP"], num_iters=10))

@@ -10,9 +10,9 @@ from repro.core import dedup
 from .common import emit, paper_datasets
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    for name, g in paper_datasets(scale=0.25).items():
+    for name, g in paper_datasets(scale=0.03 if smoke else 0.25).items():
         exp = g.expand()
         rows.append((f"size_{name}_EXP", 0.0,
                      f"edges={exp.n_edges};bytes={exp.nbytes()}"))

@@ -17,15 +17,21 @@ from repro.data.synth import barabasi_albert_condensed
 from .common import emit, time_call
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    datasets = {
-        "S1": barabasi_albert_condensed(5_000, 100, 60.0, 10.0, seed=0),
-        "N1": barabasi_albert_condensed(8_000, 400, 25.0, 8.0, seed=1),
-    }
+    if smoke:
+        datasets = {
+            "S1": barabasi_albert_condensed(400, 10, 20.0, 5.0, seed=0),
+            "N1": barabasi_albert_condensed(600, 40, 10.0, 4.0, seed=1),
+        }
+    else:
+        datasets = {
+            "S1": barabasi_albert_condensed(5_000, 100, 60.0, 10.0, seed=0),
+            "N1": barabasi_albert_condensed(8_000, 400, 25.0, 8.0, seed=1),
+        }
     n_dev = len(jax.devices())
     for name, g in datasets.items():
-        corr = dedup.build_correction(g)
+        corr = dedup.build_correction_streaming(g)
         reps = {
             "EXP": engine.to_device(g.expand()),
             "DEDUPC": engine.to_device(g, correction=corr),

@@ -26,17 +26,25 @@ Edges(ID1, ID2) :- TaughtCourse(ID1, courseId), TookCourse(ID2, courseId).
 """
 
 
-def run() -> list:
-    cases = [
-        ("dblp", dblp_catalog(4000, 8000, 6.0, seed=0), Q_DBLP),
-        ("tpch", tpch_catalog(2000, 8000, 400, 4.0, seed=0), Q_TPCH),
-        ("univ", univ_catalog(100, 2000, 200, 5.0, seed=0), Q_UNIV),
-    ]
+def run(smoke: bool = False) -> list:
+    if smoke:
+        cases = [
+            ("dblp", dblp_catalog(300, 600, 4.0, seed=0), Q_DBLP),
+            ("tpch", tpch_catalog(200, 800, 60, 3.0, seed=0), Q_TPCH),
+            ("univ", univ_catalog(20, 200, 40, 4.0, seed=0), Q_UNIV),
+        ]
+    else:
+        cases = [
+            ("dblp", dblp_catalog(4000, 8000, 6.0, seed=0), Q_DBLP),
+            ("tpch", tpch_catalog(2000, 8000, 400, 4.0, seed=0), Q_TPCH),
+            ("univ", univ_catalog(100, 2000, 200, 5.0, seed=0), Q_UNIV),
+        ]
+    repeats = 1 if smoke else 3
     rows = []
     for name, cat, q in cases:
-        t_c = time_call(lambda: extract(cat, q, mode="auto"), repeats=3)
+        t_c = time_call(lambda: extract(cat, q, mode="auto"), repeats=repeats)
         res_c = extract(cat, q, mode="auto")
-        t_e = time_call(lambda: extract(cat, q, mode="expanded"), repeats=3)
+        t_e = time_call(lambda: extract(cat, q, mode="expanded"), repeats=repeats)
         res_e = extract(cat, q, mode="expanded")
         rows.append((
             f"extract_{name}_condensed",

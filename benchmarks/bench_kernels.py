@@ -17,10 +17,11 @@ from repro.kernels.pack import TILE
 from .common import emit, time_call
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     rng = np.random.default_rng(0)
-    for n, density_exp in [(1024, 12), (2048, 14)]:
+    sizes = [(256, 4)] if smoke else [(1024, 12), (2048, 14)]
+    for n, density_exp in sizes:
         n_e = n * density_exp
         key = rng.choice(n * n, size=n_e, replace=False)
         e = BipartiteEdges(key % n, key // n, n, n)

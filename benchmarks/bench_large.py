@@ -17,32 +17,50 @@ from repro.data.synth import layered_condensed
 from .common import emit, time_call
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    datasets = {
-        # layered: same join structure as TPCH (2 virtual layers)
-        "layered_1": layered_condensed(
-            30_000, [12_000, 12_000], [60_000, 40_000, 60_000], seed=0,
-            symmetric=False,
-        ),
-        "layered_2": layered_condensed(
-            30_000, [6_000, 6_000], [60_000, 40_000, 60_000], seed=1,
-            symmetric=False,
-        ),
-        "single_1": layered_condensed(40_000, [10_000], [80_000, 80_000], seed=2),
-        "single_2": layered_condensed(20_000, [200], [60_000, 60_000], seed=3),
-    }
+    if smoke:
+        datasets = {
+            "layered_1": layered_condensed(
+                600, [240, 240], [1_200, 800, 1_200], seed=0, symmetric=False,
+            ),
+            "layered_2": layered_condensed(
+                600, [120, 120], [1_200, 800, 1_200], seed=1, symmetric=False,
+            ),
+            "single_1": layered_condensed(800, [200], [1_600, 1_600], seed=2),
+            "single_2": layered_condensed(400, [8], [1_200, 1_200], seed=3),
+        }
+    else:
+        datasets = {
+            # layered: same join structure as TPCH (2 virtual layers)
+            "layered_1": layered_condensed(
+                30_000, [12_000, 12_000], [60_000, 40_000, 60_000], seed=0,
+                symmetric=False,
+            ),
+            "layered_2": layered_condensed(
+                30_000, [6_000, 6_000], [60_000, 40_000, 60_000], seed=1,
+                symmetric=False,
+            ),
+            "single_1": layered_condensed(40_000, [10_000], [80_000, 80_000], seed=2),
+            "single_2": layered_condensed(20_000, [200], [60_000, 60_000], seed=3),
+        }
     for name, g in datasets.items():
         t0 = time.perf_counter()
         exp = g.expand()
         t_exp = time.perf_counter() - t0
         t0 = time.perf_counter()
-        corr = dedup.build_correction(g)
+        corr = dedup.build_correction_streaming(g)
         t_corr = time.perf_counter() - t0
+        rows.append((
+            f"large_{name}_stream_acct", 0.0,
+            f"paths={corr.accounting.n_paths};"
+            f"peak={corr.accounting.peak_resident_triples};"
+            f"chunks={corr.accounting.n_chunks}",
+        ))
         rows.append((f"large_{name}_expand", t_exp * 1e6,
                      f"edges={exp.n_edges};cdup_edges={g.n_edges_condensed}"))
         rows.append((f"large_{name}_correction", t_corr * 1e6,
-                     f"nnz={len(corr[0])}"))
+                     f"nnz={corr.nnz}"))
         reps = {
             "CDUP": engine.to_device(g),
             "DEDUPC": engine.to_device(g, correction=corr),

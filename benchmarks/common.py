@@ -53,7 +53,7 @@ def paper_datasets(scale: float = 1.0) -> Dict[str, object]:
 
 def representations(g) -> Dict[str, object]:
     """All device representations of one condensed graph."""
-    corr = dedup.build_correction(g)
+    corr = dedup.build_correction_streaming(g)
     reps = {
         "EXP": engine.to_device(g.expand()),
         "C-DUP": engine.to_device(g),

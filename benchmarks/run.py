@@ -1,6 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]``
+
+``--smoke`` runs every section at toy sizes — seconds, not minutes — so
+scripts/check.sh can gate a PR on all bench code paths actually running
+(numbers from a smoke run are not comparable to full runs).
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers as
 comment lines).  Roofline terms come from the dry-run JSON artifacts
@@ -9,6 +13,7 @@ comment lines).  Roofline terms come from the dry-run JSON artifacts
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -51,6 +56,11 @@ def run_roofline_summary() -> None:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run one section")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="toy sizes: exercise every bench code path in seconds",
+    )
     args = ap.parse_args()
 
     t0 = time.time()
@@ -60,7 +70,10 @@ def main() -> int:
         print(f"# === {title} ===")
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         try:
-            mod.run()
+            if "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(smoke=args.smoke)
+            else:
+                mod.run()
         except Exception as e:  # a failing section must not hide the rest
             print(f"bench_{name}_FAILED,0.0,{type(e).__name__}:{e}")
             import traceback

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RecsysConfig
-from repro.core import algorithms, dedup, engine, extract
+from repro.core import algorithms, extract
 from repro.core.relational import Catalog, Table
 from repro.data.pipeline import sasrec_batches
 from repro.models import sasrec
@@ -67,22 +67,21 @@ def main():
     print(f"co-interaction graph: {g.n_edges_condensed} condensed edges "
           f"vs {g.n_edges_expanded()} expanded "
           f"({g.n_edges_expanded()/max(g.n_edges_condensed,1):.0f}x)")
-    corr = dedup.build_correction(g)
-    dev = engine.to_device(g, correction=corr)
-    pr = algorithms.pagerank(dev, num_iters=10)
-    print(f"most central user (candidate-generation seed): "
-          f"{int(jnp.argmax(pr))}")
-
     # --- batched serving: per-user queries fused into one propagation -------
     from repro.serve import GraphQuery, GraphQueryServer
 
-    # ppr needs the duplicate-exact graph; common-neighbor scoring keeps
-    # the duplication signal => raw C-DUP with self loops
-    server = GraphQueryServer(
-        dev,
-        counts_graph=engine.to_device(g, drop_self_loops=False),
-        max_batch=32,
-    )
+    # from_condensed builds the DEDUP-C correction under a streaming
+    # budget (the raw expansion never materializes on the host,
+    # DESIGN.md §2) and wires ppr against the duplicate-exact graph,
+    # common-neighbor scoring against raw C-DUP (self loops kept)
+    server = GraphQueryServer.from_condensed(g, budget_bytes=2 << 20, max_batch=32)
+    acct = server.correction_accounting
+    print(f"correction built streaming: peak {acct.peak_resident_triples} "
+          f"resident triples over {acct.n_chunks} chunks "
+          f"({acct.n_paths} raw paths)")
+    pr = algorithms.pagerank(server.graph, num_iters=10)
+    print(f"most central user (candidate-generation seed): "
+          f"{int(jnp.argmax(pr))}")
     queries = [GraphQuery(qid=i, kind="common_neighbors", node=int(u))
                for i, u in enumerate(rng.integers(0, n_users, size=24))]
     queries += [GraphQuery(qid=100 + i, kind="ppr", node=int(u))

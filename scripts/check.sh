@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# One-command PR gate: tier-1 tests, tier-2 property tests, smoke benches.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (unit + integration) =="
+python -m pytest -x -q -m "not tier2"
+
+echo "== tier-2 (property / statistical) =="
+python -m pytest -q -m tier2
+
+echo "== smoke benches (every section at toy sizes) =="
+python -m benchmarks.run --smoke
+
+echo "== all gates passed =="

@@ -29,9 +29,67 @@ __all__ = [
     "Chain",
     "CondensedGraph",
     "ExpandedGraph",
+    "ExpansionAccounting",
     "CSR",
     "build_csr",
+    "fold_path_pairs",
+    "split_expansion_budget",
+    "DEFAULT_CHUNK_ROWS",
 ]
+
+# Leading-row block size used when a streaming caller gives no explicit
+# chunking: small graphs expand in one block (no overhead vs the old
+# one-shot path), graphs with more real nodes get bounded blocks.
+DEFAULT_CHUNK_ROWS = 65_536
+
+
+@dataclasses.dataclass
+class ExpansionAccounting:
+    """Bookkeeping for streaming expansion (DESIGN.md §2).
+
+    One instance is threaded through ``iter_path_pairs`` (which reports the
+    active chunk's raw-composition bound) and :func:`fold_path_pairs`
+    (which reports sorted-run residency), so ``peak_resident_triples`` is
+    an upper bound on the number of expanded ``(u, v, m)`` triples live at
+    any instant — the quantity the streaming-budget benchmarks assert
+    against ``budget_triples``.
+    """
+
+    budget_triples: Optional[int] = None
+    n_chunks: int = 0                # chunks yielded by the iterator
+    n_paths: int = 0                 # raw expanded paths walked
+    n_triples_out: int = 0           # aggregated triples yielded
+    peak_resident_triples: int = 0   # max triples live at once
+    n_merges: int = 0                # sorted-run consolidation passes
+    n_overflow_chunks: int = 0       # single rows whose cost exceeds budget
+    resident_chunk: int = 0          # live: active chunk's raw bound
+    resident_runs: int = 0           # live: triples held in fold runs
+
+    def _observe(self) -> None:
+        live = self.resident_chunk + self.resident_runs
+        if live > self.peak_resident_triples:
+            self.peak_resident_triples = live
+
+    def begin_chunk(self, cost: int, budget: Optional[int] = None) -> None:
+        """``budget`` is the *chunker's* active budget (the half split off
+        ``budget_triples``) — a chunk above it is a single row too big to
+        honor the residency guarantee, recorded as an overflow."""
+        self.n_chunks += 1
+        self.resident_chunk = int(cost)
+        if budget is not None and cost > budget:
+            self.n_overflow_chunks += 1
+        self._observe()
+
+    def end_chunk(self, n_paths: int, n_triples: int) -> None:
+        self.n_paths += int(n_paths)
+        self.n_triples_out += int(n_triples)
+        self.resident_chunk = 0
+
+    def runs_changed(self, resident: int, merged: bool = False) -> None:
+        self.resident_runs = int(resident)
+        if merged:
+            self.n_merges += 1
+        self._observe()
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +213,110 @@ class Chain:
         src, dst, mult = _compose_chain(self.edges)
         return src, dst, mult
 
+    # -- streaming expansion (DESIGN.md §2) ------------------------------------
+    def per_source_expansion_cost(self) -> np.ndarray:
+        """Upper bound on raw triples materialized expanding each leading row.
+
+        ``cost[u] = Σ_i paths(u -> level i+1)``: the sum over compose steps
+        of the pre-aggregation output size, i.e. everything the chunked
+        composition ever materializes for ``u``.  Computed with k+1
+        backward bincount sweeps — O(k²·E) host work, no expansion.
+        """
+        cost = np.zeros(self.n_real, dtype=np.int64)
+        for i in range(len(self.edges)):
+            v = np.ones(self.edges[i].n_dst, dtype=np.float64)
+            for j in range(i, -1, -1):
+                e = self.edges[j]
+                v = np.bincount(
+                    e.src, weights=v[e.dst], minlength=e.n_src
+                )
+            cost += v.astype(np.int64)
+        return cost
+
+    def n_paths(self) -> int:
+        """Total expanded path count (``M.sum()``) without expanding."""
+        v = np.ones(self.edges[-1].n_dst, dtype=np.float64)
+        for e in reversed(self.edges):
+            v = np.bincount(e.src, weights=v[e.dst], minlength=e.n_src)
+        return int(v.sum())
+
+    def iter_path_pairs(
+        self,
+        chunk_rows: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+        accounting: Optional["ExpansionAccounting"] = None,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Chunked :meth:`path_pairs`: yield aggregated (u, v, m) triples
+        block-by-block over leading real rows, never composing more than a
+        bounded slice of the expansion at once.
+
+        ``chunk_rows`` fixes the block width in leading rows;
+        ``budget_triples`` sizes blocks adaptively from
+        :meth:`per_source_expansion_cost` so each block's raw composition
+        stays within the budget (a single row whose cost exceeds it gets
+        its own block, recorded as an overflow chunk in ``accounting``).
+        With neither, blocks default to :data:`DEFAULT_CHUNK_ROWS`.
+        Concatenating and aggregating all yielded chunks reproduces
+        :meth:`path_pairs` exactly (chunks of one chain are disjoint in u).
+        """
+        e0 = self.edges[0]
+        order = np.argsort(e0.src, kind="stable")
+        src_sorted = e0.src[order]
+        dst_sorted = e0.dst[order]
+        # Cost planning is only needed for budget-sized blocks and for
+        # accounting; the default fixed-width path skips the k+1 sweeps.
+        cost = None
+        if budget_triples is not None or accounting is not None:
+            cost = self.per_source_expansion_cost()
+        for lo, hi in _row_blocks(self.n_real, cost, chunk_rows, budget_triples):
+            a = np.searchsorted(src_sorted, lo, side="left")
+            b = np.searchsorted(src_sorted, hi, side="left")
+            if a == b:
+                continue
+            if accounting is not None:
+                accounting.begin_chunk(
+                    int(cost[lo:hi].sum()), budget=budget_triples
+                )
+            sub = BipartiteEdges(
+                src_sorted[a:b], dst_sorted[a:b], e0.n_src, e0.n_dst
+            )
+            s, d, m = _compose_chain([sub] + list(self.edges[1:]))
+            if accounting is not None:
+                accounting.end_chunk(int(m.sum()), s.size)
+            yield s, d, m
+
+
+def _row_blocks(
+    n: int,
+    cost: Optional[np.ndarray],
+    chunk_rows: Optional[int],
+    budget_triples: Optional[int],
+) -> Iterator[Tuple[int, int]]:
+    """Leading-row block boundaries for one streaming pass.
+
+    With a budget, each block is the maximal row prefix whose summed cost
+    stays within it (never fewer than one row), found by binary search on
+    the cumulative cost — no per-row Python loop.
+    """
+    if n == 0:
+        return
+    if budget_triples is not None:
+        assert cost is not None
+        cum = np.cumsum(cost)
+        lo = 0
+        base = 0
+        while lo < n:
+            hi = int(np.searchsorted(cum, base + budget_triples, side="right"))
+            hi = max(hi, lo + 1)  # a single row may exceed the budget
+            yield lo, hi
+            base = int(cum[hi - 1])
+            lo = hi
+        return
+    width = chunk_rows if chunk_rows is not None else DEFAULT_CHUNK_ROWS
+    width = max(int(width), 1)
+    for lo in range(0, n, width):
+        yield lo, min(lo + width, n)
+
 
 def _compose_pair(
     left: Tuple[np.ndarray, np.ndarray, np.ndarray],
@@ -200,6 +362,74 @@ def _compose_chain(
     for e in edges[1:]:
         acc = _compose_pair(acc, e)
     return acc
+
+
+def split_expansion_budget(budget_triples: Optional[int]) -> Optional[int]:
+    """Half of a full streaming budget: one half bounds chunk composition,
+    the other bounds sorted-run residency in :func:`fold_path_pairs`."""
+    if budget_triples is None:
+        return None
+    return max(int(budget_triples) // 2, 1)
+
+
+def fold_path_pairs(
+    chunks: Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+    n_dst: int,
+    budget_triples: Optional[int] = None,
+    accounting: Optional[ExpansionAccounting] = None,
+    aggregate=None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Out-of-core merge of aggregated (src, dst, mult) chunk triples.
+
+    Chunks accumulate as sorted runs; whenever the resident triple count
+    exceeds ``budget_triples`` the runs are consolidated into one (equal
+    keys summed), so residency never grows past
+    ``max(budget, unique pairs) + one chunk``.  The result is identical —
+    ordering, values, and dtypes — to aggregating all chunks at once.
+    ``aggregate`` defaults to the host merge; pass an alternative (e.g.
+    the device segment-sum fold in :mod:`repro.core.dedup`) to run the
+    consolidation elsewhere.
+    """
+    if aggregate is None:
+        aggregate = _aggregate_pairs
+    runs_s: List[np.ndarray] = []
+    runs_d: List[np.ndarray] = []
+    runs_m: List[np.ndarray] = []
+    resident = 0
+    for s, d, m in chunks:
+        runs_s.append(s)
+        runs_d.append(d)
+        runs_m.append(m)
+        resident += s.size
+        if accounting is not None:
+            accounting.runs_changed(resident)
+        if (
+            budget_triples is not None
+            and resident > budget_triples
+            and len(runs_s) > 1
+        ):
+            s, d, m = aggregate(
+                np.concatenate(runs_s),
+                np.concatenate(runs_d),
+                np.concatenate(runs_m),
+                n_dst,
+            )
+            runs_s, runs_d, runs_m = [s], [d], [m]
+            resident = s.size
+            if accounting is not None:
+                accounting.runs_changed(resident, merged=True)
+    if not runs_s:
+        z = np.empty(0, dtype=np.int64)
+        return z, z, z
+    out = aggregate(
+        np.concatenate(runs_s),
+        np.concatenate(runs_d),
+        np.concatenate(runs_m),
+        n_dst,
+    )
+    if accounting is not None:
+        accounting.runs_changed(out[0].size, merged=len(runs_s) > 1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -299,43 +529,108 @@ class CondensedGraph:
         return n
 
     # -- semantics ------------------------------------------------------------
-    def multiplicities(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """All expanded (u, v, multiplicity) triples (host, O(expansion))."""
-        parts_s: List[np.ndarray] = []
-        parts_d: List[np.ndarray] = []
-        parts_m: List[np.ndarray] = []
+    def iter_path_pairs(
+        self,
+        chunk_rows: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+        accounting: Optional[ExpansionAccounting] = None,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Chunked expansion of the whole graph: every chain's
+        :meth:`Chain.iter_path_pairs` blocks followed by direct-edge blocks
+        (each aggregated, multiplicity = repeat count).  Chunks from
+        different chains / the direct set may repeat a (u, v) pair — fold
+        them with :func:`fold_path_pairs` to recover
+        :meth:`multiplicities` exactly.
+        """
         for c in self.chains:
-            s, d, m = c.path_pairs()
-            parts_s.append(s)
-            parts_d.append(d)
-            parts_m.append(m)
+            yield from c.iter_path_pairs(
+                chunk_rows=chunk_rows,
+                budget_triples=budget_triples,
+                accounting=accounting,
+            )
         if self.direct is not None and self.direct.n_edges:
-            parts_s.append(self.direct.src)
-            parts_d.append(self.direct.dst)
-            parts_m.append(np.ones(self.direct.n_edges, dtype=np.int64))
-        if not parts_s:
-            z = np.empty(0, dtype=np.int64)
-            return z, z, z
-        return _aggregate_pairs(
-            np.concatenate(parts_s),
-            np.concatenate(parts_d),
-            np.concatenate(parts_m),
+            e = self.direct
+            order = np.argsort(e.src, kind="stable")
+            src_sorted = e.src[order]
+            dst_sorted = e.dst[order]
+            cost = None
+            if budget_triples is not None:
+                cost = np.bincount(e.src, minlength=e.n_src)
+            for lo, hi in _row_blocks(e.n_src, cost, chunk_rows, budget_triples):
+                a = np.searchsorted(src_sorted, lo, side="left")
+                b = np.searchsorted(src_sorted, hi, side="left")
+                if a == b:
+                    continue
+                if accounting is not None:
+                    accounting.begin_chunk(b - a, budget=budget_triples)
+                s, d, m = _aggregate_pairs(
+                    src_sorted[a:b],
+                    dst_sorted[a:b],
+                    np.ones(b - a, dtype=np.int64),
+                    e.n_dst,
+                )
+                if accounting is not None:
+                    accounting.end_chunk(b - a, s.size)
+                yield s, d, m
+
+    def multiplicities(
+        self,
+        chunk_rows: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+        accounting: Optional[ExpansionAccounting] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """All expanded (u, v, multiplicity) triples.
+
+        Streams :meth:`iter_path_pairs` through the sorted-run fold, so
+        peak host memory is O(unique pairs + one chunk), never O(raw
+        expanded paths) — the expansion memory wall the condensed
+        representation exists to avoid.  ``budget_triples`` is split
+        half/half between chunk composition and run residency, so the
+        combined peak stays within the budget whenever the unique-pair
+        count and every single row's expansion fit in half of it.
+        """
+        half = split_expansion_budget(budget_triples)
+        return fold_path_pairs(
+            self.iter_path_pairs(
+                chunk_rows=chunk_rows,
+                budget_triples=half,
+                accounting=accounting,
+            ),
             self.n_real,
+            budget_triples=half,
+            accounting=accounting,
         )
 
-    def expand(self, drop_self_loops: bool = False) -> ExpandedGraph:
-        """Materialize EXP (paper's baseline representation)."""
-        s, d, m = self.multiplicities()
+    def expand(
+        self,
+        drop_self_loops: bool = False,
+        chunk_rows: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+    ) -> ExpandedGraph:
+        """Materialize EXP (paper's baseline representation) via the
+        chunked iterator — the output is O(unique pairs) either way; the
+        intermediate expansion is bounded by the chunking."""
+        s, d, m = self.multiplicities(
+            chunk_rows=chunk_rows, budget_triples=budget_triples
+        )
         g = ExpandedGraph(s, d, m, self.n_real)
         return g.without_self_loops() if drop_self_loops else g
 
-    def n_edges_expanded(self) -> int:
-        s, _, _ = self.multiplicities()
+    def n_paths_expanded(self) -> int:
+        """Total expanded path count (``M.sum()``), computed without
+        expanding (k backward sweeps per chain)."""
+        n = sum(c.n_paths() for c in self.chains)
+        if self.direct is not None:
+            n += self.direct.n_edges
+        return n
+
+    def n_edges_expanded(self, chunk_rows: Optional[int] = None) -> int:
+        s, _, _ = self.multiplicities(chunk_rows=chunk_rows)
         return int(s.size)
 
-    def duplication_ratio(self) -> float:
+    def duplication_ratio(self, chunk_rows: Optional[int] = None) -> float:
         """Mean path multiplicity over expanded edges (1.0 = no duplication)."""
-        _, _, m = self.multiplicities()
+        _, _, m = self.multiplicities(chunk_rows=chunk_rows)
         return float(m.mean()) if m.size else 1.0
 
     # -- preprocessing (paper §4.2 step 6) -------------------------------------

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,9 @@ from ..distributed.sharding import shard_frontier
 from .condensed import BipartiteEdges, CondensedGraph, ExpandedGraph
 from .semiring import PLUS_TIMES, Semiring, segment_reduce
 
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .dedup import StreamedCorrection
+
 __all__ = [
     "DeviceBipartite",
     "DeviceExpanded",
@@ -49,10 +52,28 @@ __all__ = [
     "DevicePackedLayer",
     "DevicePacked",
     "DeviceGraph",
+    "Correction",
     "to_device",
     "to_device_packed",
     "propagate",
 ]
+
+# A DEDUP-C correction as the engine accepts it: the plain (src, dst,
+# count) triples from build_correction, or the StreamedCorrection wrapper
+# from build_correction_streaming (accounting rides along; the arrays are
+# identical).  Anything that unpacks into three host arrays works.
+Correction = Union[
+    Tuple[np.ndarray, np.ndarray, np.ndarray], "StreamedCorrection"
+]
+
+
+def _correction_triples(
+    correction: Optional[Correction],
+) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    if correction is None:
+        return None
+    cs, cd, cm = correction
+    return cs, cd, cm
 
 
 @partial(
@@ -204,17 +225,20 @@ def self_path_counts(graph: CondensedGraph) -> np.ndarray:
 
 def to_device(
     graph: Union[CondensedGraph, ExpandedGraph],
-    correction: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    correction: Optional[Correction] = None,
     deduplicated: bool = False,
     drop_self_loops: bool = True,
 ) -> DeviceGraph:
     """Build the device representation.
 
-    For ``CondensedGraph`` inputs, pass ``correction`` (from
-    :func:`repro.core.dedup.build_correction`) to get DEDUP-C semantics, or
-    ``deduplicated=True`` for DEDUP-1 output.  Without either, ring
-    propagation counts duplicate paths (C-DUP semantics) — fine for
-    idempotent algorithms, flagged by :func:`propagate` otherwise.
+    For ``CondensedGraph`` inputs, pass ``correction`` (the triples from
+    :func:`repro.core.dedup.build_correction` or a
+    :class:`~repro.core.dedup.StreamedCorrection` built under a budget by
+    :func:`~repro.core.dedup.build_correction_streaming`) to get DEDUP-C
+    semantics, or ``deduplicated=True`` for DEDUP-1 output.  Without
+    either, ring propagation counts duplicate paths (C-DUP semantics) —
+    fine for idempotent algorithms, flagged by :func:`propagate`
+    otherwise.
     """
     if isinstance(graph, ExpandedGraph):
         g = graph.without_self_loops() if drop_self_loops else graph
@@ -227,8 +251,9 @@ def to_device(
     chains = tuple(tuple(_dev_edges(e) for e in c.edges) for c in graph.chains)
     direct = _dev_edges(graph.direct) if graph.direct is not None else None
     corr = None
-    if correction is not None:
-        cs, cd, cm = correction
+    triples = _correction_triples(correction)
+    if triples is not None:
+        cs, cd, cm = triples
         corr = (
             jnp.asarray(cs, dtype=jnp.int32),
             jnp.asarray(cd, dtype=jnp.int32),
@@ -281,7 +306,7 @@ def _pack_edges(e: BipartiteEdges, dev: DeviceBipartite) -> DevicePackedLayer:
 
 def to_device_packed(
     graph: CondensedGraph,
-    correction: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    correction: Optional[Correction] = None,
     deduplicated: bool = False,
     drop_self_loops: bool = True,
     backend: str = "auto",
@@ -290,7 +315,8 @@ def to_device_packed(
     """Like :func:`to_device`, additionally packing every condensed layer
     into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
     ring propagation runs on the Pallas kernel.  Correction / dedup
-    semantics are identical to :func:`to_device`.
+    semantics are identical to :func:`to_device` (streamed corrections
+    accepted the same way).
     """
     base = to_device(
         graph,

@@ -39,6 +39,14 @@ class NodeSpace:
 
     def lookup(self, values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Map raw keys to dense ids; second array = found mask."""
+        values = np.asarray(values)
+        if self.n == 0:
+            # clip against n-1 == -1 would index the empty key array;
+            # an empty space simply finds nothing.
+            return (
+                np.zeros(values.shape, dtype=np.int64),
+                np.zeros(values.shape, dtype=bool),
+            )
         idx = np.searchsorted(self.keys, values)
         idx = np.clip(idx, 0, self.n - 1)
         found = self.keys[idx] == values

@@ -197,6 +197,51 @@ class GraphQueryServer:
         # served-traffic accounting (asserted in tests, shown in examples)
         self.n_queries = 0
         self.n_propagation_batches = 0
+        # set by from_condensed: streaming-correction build evidence
+        self.correction_accounting = None
+
+    @classmethod
+    def from_condensed(
+        cls,
+        graph,
+        *,
+        budget_bytes: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+        packed: bool = False,
+        drop_self_loops: bool = True,
+        **kwargs,
+    ) -> "GraphQueryServer":
+        """Load a host ``CondensedGraph`` for serving.
+
+        Builds the DEDUP-C correction with
+        :func:`~repro.core.dedup.build_correction_streaming` under the
+        given expansion budget — so a server can load graphs whose full
+        expansion exceeds host memory — and wires the duplicate-exact
+        graph for ``bfs``/``ppr`` next to a raw C-DUP ``counts_graph``
+        (self loops kept so the multiplicity signal survives) for
+        ``common_neighbors``.  ``packed=True`` uses
+        :func:`~repro.core.engine.to_device_packed` so batched ring steps
+        can hit the Pallas SpMM.  The build's
+        :class:`~repro.core.condensed.ExpansionAccounting` is kept on
+        ``server.correction_accounting``.
+        """
+        from ..core import dedup as _dedup
+        from ..core import engine as _engine
+
+        correction = _dedup.build_correction_streaming(
+            graph,
+            budget_bytes=budget_bytes,
+            budget_triples=budget_triples,
+            drop_self_loops=drop_self_loops,
+        )
+        to_dev = _engine.to_device_packed if packed else _engine.to_device
+        exact = to_dev(
+            graph, correction=correction, drop_self_loops=drop_self_loops
+        )
+        counts = to_dev(graph, drop_self_loops=False)
+        server = cls(exact, counts_graph=counts, **kwargs)
+        server.correction_accounting = correction.accounting
+        return server
 
     def _validate(self, query: GraphQuery, extra_qids: set) -> None:
         if query.kind not in ("bfs", "ppr", "common_neighbors"):

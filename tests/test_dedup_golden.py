@@ -1,0 +1,113 @@
+"""Seeded golden regressions for the dedup family.
+
+Fixed-seed graphs with recorded representation sizes: expanded edge
+counts, BITMAP byte footprints, DEDUP-1 edge totals, DEDUP-2 structure.
+A change in any of these numbers is a representation-size regression (or
+an intentional algorithm change) — it should fail loudly here instead of
+only drifting in benchmark output.  All values were recorded from the
+implementation at the time this harness was added; update them only with
+an explanation of why the representation legitimately changed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dedup
+from repro.data.synth import barabasi_albert_condensed, layered_condensed
+
+
+def _ba_sparse():
+    return barabasi_albert_condensed(200, 80, 5.0, 2.0, seed=11)
+
+
+def _ba_dense():
+    return barabasi_albert_condensed(150, 12, 40.0, 8.0, seed=12)
+
+
+def _layered():
+    return layered_condensed(60, [20, 15], [150, 100, 150], seed=13, symmetric=False)
+
+
+GOLDEN_GRAPHS = {
+    # name: (factory, cond_edges, exp_edges, paths, corr_nnz, corr_sum)
+    "ba_sparse": (_ba_sparse, 736, 999, 1900, 279, 1004),
+    "ba_dense": (_ba_dense, 980, 6740, 20576, 3206, 13936),
+    "layered": (_layered, 495, 3005, 14151, 2576, 11196),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_GRAPHS))
+def test_golden_graph_and_correction_sizes(name):
+    factory, cond_edges, exp_edges, paths, corr_nnz, corr_sum = GOLDEN_GRAPHS[name]
+    g = factory()
+    assert g.n_edges_condensed == cond_edges
+    assert g.n_edges_expanded() == exp_edges
+    assert g.n_paths_expanded() == paths
+    cs, cd, cm = dedup.build_correction(g)
+    assert cs.size == corr_nnz
+    assert int(cm.sum()) == corr_sum
+    streamed = dedup.build_correction_streaming(g, budget_triples=4 * exp_edges)
+    assert streamed.nnz == corr_nnz and int(streamed.count.sum()) == corr_sum
+
+
+GOLDEN_BITMAPS = {
+    # name: (bitmap1_nbytes, bitmap1_n, bitmap2_nbytes, bitmap2_n)
+    "ba_sparse": (14966, 368, 13062, 249),
+    "ba_dense": (22180, 490, 18772, 277),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_BITMAPS))
+def test_golden_bitmap_sizes(name):
+    b1_bytes, b1_n, b2_bytes, b2_n = GOLDEN_BITMAPS[name]
+    g = GOLDEN_GRAPHS[name][0]()
+    b1 = dedup.bitmap1(g)
+    assert (b1.nbytes(), b1.n_bitmaps) == (b1_bytes, b1_n)
+    b2 = dedup.bitmap2(g)
+    assert (b2.nbytes(), b2.n_bitmaps) == (b2_bytes, b2_n)
+    assert b2.nbytes() < b1.nbytes()  # set cover must not regress past BITMAP-1
+
+
+GOLDEN_DEDUP1 = {
+    # name: {algorithm: total_edges}
+    "ba_sparse": {
+        "dedup1_naive_virtual_first": 285,
+        "dedup1_naive_real_first": 281,
+        "dedup1_greedy_real_first": 284,
+        "dedup1_greedy_virtual_first": 270,
+    },
+    "ba_dense": {
+        "dedup1_naive_virtual_first": 1577,
+        "dedup1_naive_real_first": 1466,
+        "dedup1_greedy_real_first": 1495,
+        "dedup1_greedy_virtual_first": 1584,
+    },
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_DEDUP1))
+def test_golden_dedup1_edge_totals(name):
+    g = GOLDEN_GRAPHS[name][0]()
+    for fn_name, want in GOLDEN_DEDUP1[name].items():
+        fn = getattr(dedup, fn_name)
+        res = fn(g, ordering="identity", rng=np.random.default_rng(0))
+        assert res.total_edges == want, fn_name
+
+
+GOLDEN_DEDUP2 = {
+    # name: (n_edges, n_sets, n_vv_edges, n_pairs)
+    "ba_sparse": (432, 177, 16, 448),
+    "ba_dense": (2821, 1222, 342, 3320),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_DEDUP2))
+def test_golden_dedup2_structure_and_multiplicities(name):
+    n_edges, n_sets, n_vv, n_pairs = GOLDEN_DEDUP2[name]
+    g = GOLDEN_GRAPHS[name][0]()
+    rep = dedup.dedup2_greedy(g, ordering="identity", rng=np.random.default_rng(0))
+    assert rep.n_edges == n_edges
+    assert len(rep.sets) == n_sets
+    assert len(rep.vv_edges) == n_vv
+    mult = rep.pair_multiplicities()
+    assert len(mult) == n_pairs
+    assert all(c == 1 for c in mult.values())

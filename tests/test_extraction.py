@@ -110,6 +110,31 @@ def test_multiple_edges_statements(dblp):
     ).all()
 
 
+def test_empty_node_space(dblp):
+    """A Nodes statement matching zero rows must extract an empty graph,
+    not crash in NodeSpace.lookup (clip against n-1 == -1 used to index
+    the empty key array)."""
+    q = """
+    Nodes(ID, Name) :- Author(ID, Name), ID < 0.
+    Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+    """
+    for mode in ("auto", "condensed", "expanded"):
+        res = extract(dblp, q, mode=mode)
+        assert res.graph.n_real == 0
+        assert res.graph.n_edges_expanded() == 0
+        assert res.dropped_endpoints > 0  # every endpoint missed the space
+    # direct lookup contract on an empty space
+    from repro.core.extract import NodeSpace
+    space = NodeSpace(
+        keys=np.empty(0, dtype=np.int64),
+        type_ids=np.empty(0, dtype=np.int32),
+        type_names=[],
+    )
+    idx, found = space.lookup(np.array([1, 2, 3]))
+    assert idx.shape == found.shape == (3,)
+    assert not found.any()
+
+
 def test_advisor(dblp):
     res = extract(dblp, Q1)
     rec = recommend(res.graph, workload="multi_pass")

@@ -1,0 +1,252 @@
+"""Property-based equivalence harness for the condensed/dedup stack.
+
+Three families of properties over randomly generated condensed graphs
+(1-3 chains, 1-2 layers, optional direct edges and self loops):
+
+  (a) ``build_correction_streaming`` is byte-identical to
+      ``build_correction`` for every chunking / budget / fold backend;
+  (b) ring and idempotent algorithms on the condensed representation
+      with a (streamed) correction match the same algorithm on the
+      materialized expansion;
+  (c) every dedup-family output (DEDUP-1 x4, DEDUP-2, BITMAP-1/2)
+      covers exactly the expanded edge set with no duplicates.
+
+The ``@given`` tests run under real hypothesis when it is installed and
+degrade to skips via the conftest stub offline; the seeded ``_offline``
+variants keep the same properties exercised either way.  Hypothesis
+tests carry the ``tier2`` marker (see scripts/check.sh).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import expanded_simple_pairs, random_membership_graph
+
+from repro.core import algorithms, dedup, engine
+from repro.core.condensed import (
+    BipartiteEdges,
+    Chain,
+    CondensedGraph,
+    ExpansionAccounting,
+)
+from repro.core.semiring import PLUS_TIMES
+
+
+# ---------------------------------------------------------------------------
+# Random graph generator: the issue's strategy space — 1-3 chains of 1-2
+# layers over one real node set, optional direct edges including self loops.
+# ---------------------------------------------------------------------------
+
+def random_condensed(rng: np.random.Generator) -> CondensedGraph:
+    n_real = int(rng.integers(3, 16))
+    chains = []
+    for _ in range(int(rng.integers(1, 4))):
+        layers = [int(rng.integers(2, 6)) for _ in range(int(rng.integers(1, 3)))]
+        levels = [n_real] + layers + [n_real]
+        edges = []
+        for a, b in zip(levels, levels[1:]):
+            ne = int(rng.integers(2, 4 * max(a, b)))
+            edges.append(
+                BipartiteEdges(
+                    rng.integers(0, a, ne), rng.integers(0, b, ne), a, b
+                )
+            )
+        chains.append(Chain(edges))
+    direct = None
+    if rng.random() < 0.7:
+        nd = int(rng.integers(1, 2 * n_real))
+        src = rng.integers(0, n_real, nd)
+        dst = rng.integers(0, n_real, nd)
+        if rng.random() < 0.5:  # force some self loops
+            dst[: max(nd // 3, 1)] = src[: max(nd // 3, 1)]
+        direct = BipartiteEdges(src, dst, n_real, n_real)
+    return CondensedGraph(n_real, chains, direct)
+
+
+def _assert_same_triples(ref, got):
+    for name, a, b in zip(("src", "dst", "count"), ref, got):
+        assert a.dtype == b.dtype, name
+        assert np.array_equal(a, b), name
+
+
+STREAMING_VARIANTS = [
+    dict(chunk_rows=1),
+    dict(chunk_rows=2),
+    dict(chunk_rows=3),
+    dict(chunk_rows=5),
+    dict(chunk_rows=None),
+    dict(budget_triples=8),
+    dict(budget_triples=64),
+    dict(budget_bytes=1024),
+    dict(chunk_rows=2, device_fold=True),
+    dict(budget_triples=32, device_fold=True),
+]
+
+
+# ---------------------------------------------------------------------------
+# (a) streaming correction == batch correction
+# ---------------------------------------------------------------------------
+
+def _check_streaming_equivalence(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    g = random_condensed(rng)
+    for drop in (True, False):
+        ref = dedup.build_correction(g, drop_self_loops=drop)
+        for kw in STREAMING_VARIANTS:
+            got = dedup.build_correction_streaming(
+                g, drop_self_loops=drop, **kw
+            )
+            _assert_same_triples(ref, tuple(got))
+            assert got.accounting.n_chunks >= 1
+    # the iterator's chunks refold into multiplicities() exactly
+    ref_m = g.multiplicities()
+    for chunk_rows in (1, 3, None):
+        _assert_same_triples(ref_m, g.multiplicities(chunk_rows=chunk_rows))
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=40, deadline=None)
+def test_streaming_correction_equals_batch(seed):
+    _check_streaming_equivalence(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_streaming_correction_equals_batch_offline(seed):
+    _check_streaming_equivalence(seed)
+
+
+# ---------------------------------------------------------------------------
+# (b) condensed + correction == algorithms on the expansion
+# ---------------------------------------------------------------------------
+
+def _check_algorithm_equivalence(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    g = random_condensed(rng)
+    exp = engine.to_device(g.expand())
+    corr = dedup.build_correction_streaming(g, budget_triples=64)
+    cond = engine.to_device(g, correction=corr)
+
+    x = rng.standard_normal(g.n_real).astype(np.float32)
+    want = np.asarray(engine.propagate(exp, x, PLUS_TIMES))
+    got = np.asarray(engine.propagate(cond, x, PLUS_TIMES))
+    assert np.allclose(got, want, atol=1e-3)
+
+    pr_want = np.asarray(algorithms.pagerank(exp, num_iters=10))
+    pr_got = np.asarray(algorithms.pagerank(cond, num_iters=10))
+    assert np.allclose(pr_got, pr_want, atol=1e-5)
+
+    bfs_want = np.asarray(algorithms.bfs(exp, 0, max_iters=20))
+    bfs_got = np.asarray(algorithms.bfs(cond, 0, max_iters=20))
+    assert np.allclose(bfs_got, bfs_want)
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_condensed_with_correction_matches_expanded(seed):
+    _check_algorithm_equivalence(seed)
+
+
+@pytest.mark.parametrize("seed", [3, 11, 2024])
+def test_condensed_with_correction_matches_expanded_offline(seed):
+    _check_algorithm_equivalence(seed)
+
+
+# ---------------------------------------------------------------------------
+# (c) dedup family covers the expanded edge set exactly once
+# ---------------------------------------------------------------------------
+
+DEDUP1_FNS = [
+    dedup.dedup1_naive_virtual_first,
+    dedup.dedup1_naive_real_first,
+    dedup.dedup1_greedy_real_first,
+    dedup.dedup1_greedy_virtual_first,
+]
+
+
+def _check_dedup_family_exact_cover(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(
+        int(rng.integers(4, 20)), int(rng.integers(1, 7)), 4, rng
+    )
+    want_off = expanded_simple_pairs(g)
+    for fn in DEDUP1_FNS:
+        res = fn(g, rng=np.random.default_rng(seed + 1))
+        assert expanded_simple_pairs(res.graph) == want_off, fn.__name__
+        s, d, m = res.graph.multiplicities()
+        assert (m[s != d] <= 1).all(), fn.__name__
+    rep2 = dedup.dedup2_greedy(g, rng=np.random.default_rng(seed))
+    mult = rep2.pair_multiplicities()
+    assert set(mult) == {p for p in want_off if p[0] < p[1]}
+    assert all(c == 1 for c in mult.values())
+    s_all, d_all, _ = g.multiplicities()
+    want_all = set(zip(s_all.tolist(), d_all.tolist()))
+    for fn in (dedup.bitmap1, dedup.bitmap2):
+        u, v = fn(g).to_dedup_pairs()
+        pairs = list(zip(u.tolist(), v.tolist()))
+        assert len(pairs) == len(set(pairs)), fn.__name__
+        assert set(pairs) == want_all, fn.__name__
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_dedup_family_exact_cover(seed):
+    _check_dedup_family_exact_cover(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 5, 123])
+def test_dedup_family_exact_cover_offline(seed):
+    _check_dedup_family_exact_cover(seed)
+
+
+# ---------------------------------------------------------------------------
+# Budget accounting: the streamed build never holds more than the budget
+# of expanded triples, on a graph whose full expansion exceeds it.
+# ---------------------------------------------------------------------------
+
+def high_duplication_graph(
+    n_real: int = 300, n_virtual: int = 40, size: int = 80, seed: int = 9
+) -> CondensedGraph:
+    """Heavily overlapping membership sets: raw expanded paths greatly
+    exceed the unique-pair count (high duplication ratio)."""
+    rng = np.random.default_rng(seed)
+    sets = [
+        set(rng.choice(n_real, size=size, replace=False).tolist())
+        for _ in range(n_virtual)
+    ]
+    return dedup.graph_from_membership(n_real, sets)
+
+
+def test_streaming_budget_bounds_peak_residency():
+    g = high_duplication_graph()
+    n_paths = g.n_paths_expanded()
+    n_unique = g.n_edges_expanded()
+    budget = 3 * n_unique  # fits the correction, not the expansion
+    assert n_paths > budget, "graph must expand past the budget"
+    corr = dedup.build_correction_streaming(g, budget_triples=budget)
+    acct = corr.accounting
+    assert acct.n_paths == n_paths
+    assert acct.n_overflow_chunks == 0
+    assert acct.peak_resident_triples <= budget
+    assert acct.n_merges >= 1
+    _assert_same_triples(tuple(dedup.build_correction(g)), tuple(corr))
+
+
+def test_expansion_accounting_counts():
+    rng = np.random.default_rng(4)
+    g = random_condensed(rng)
+    acct = ExpansionAccounting()
+    s, d, m = g.multiplicities(chunk_rows=2, accounting=acct)
+    assert acct.n_paths == int(m.sum()) == g.n_paths_expanded()
+    assert acct.n_triples_out >= s.size
+    assert acct.peak_resident_triples >= s.size
+
+
+def test_streamed_correction_unpacks_like_tuple():
+    g = high_duplication_graph(n_real=40, n_virtual=5, size=12, seed=1)
+    corr = dedup.build_correction_streaming(g)
+    cs, cd, cm = corr
+    assert len(corr) == 3 and corr.nnz == cs.size
+    assert corr.nbytes() == cs.nbytes + cd.nbytes + cm.nbytes
