@@ -1,25 +1,123 @@
-"""Kernel-level benchmark: bit-packed block-sparse SpMM vs XLA segment path.
+"""Kernel-level benchmark: streamed bit-packed SpMM vs XLA segment path.
 
 Wall times on CPU are *not* the deliverable (interpret mode executes the
-kernel body in Python); the structural numbers are: packed bytes vs f32
-blocks vs edge list, and blocks touched — these drive the TPU roofline
-(HBM bytes per condensed SpMV).
+kernel body in Python); the numbers that matter are structural: packed
+bytes vs f32 blocks vs edge list, blocks touched (the TPU roofline terms),
+and the *dispatch* evidence — the column sweep crosses the old 8 MiB
+resident-source-column cliff and shows the streamed kernel no longer
+falls back to XLA there.
+
+Writes ``BENCH_kernels.json`` (repo root) with the packed-vs-fallback
+cells: per-size auto-dispatch decision under the old and new formulas,
+packed and XLA step times, and the host-pack before/after
+(``np.bitwise_or.at`` scatter vs sort+``reduceat`` fold).
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.condensed import BipartiteEdges
-from repro.kernels.ops import PackedLayer, bitmap_spmm
-from repro.kernels.pack import TILE
+from repro.kernels.ops import PackedLayer, bitmap_spmm, resolve_backend
+from repro.kernels.pack import TILE, pack_bipartite, streamed_footprint_bytes
 
 from .common import emit, time_call
+
+# The old dispatch formula kept the whole (n_src_pad, Fb) source column
+# resident in VMEM and fell back to XLA above this budget; reproduced
+# here (it no longer exists in the code) to report the lifted cliff.
+_OLD_VMEM_COLUMN_BUDGET = 8 * 2**20
+
+
+def _old_fits(n_src_pad: int, f: int, feature_block: int, itemsize: int) -> bool:
+    f_pad = -(-f // feature_block) * feature_block
+    return n_src_pad * f_pad * itemsize <= _OLD_VMEM_COLUMN_BUDGET
+
+
+def _clustered_bipartite(
+    n_src: int, n_dst: int, n_src_tiles_hit: int, per_tile: int, rng
+) -> BipartiteEdges:
+    """Edges concentrated in few source tiles: a tall source column (the
+    old cliff regime) with a slot count that stays interpret-friendly."""
+    srcs, dsts = [], []
+    tiles = rng.choice(max(n_src // TILE, 1), size=n_src_tiles_hit, replace=False)
+    for t in tiles:
+        lo = int(t) * TILE
+        hi = min(lo + TILE, n_src)
+        s = rng.choice(np.arange(lo, hi), size=min(per_tile, hi - lo), replace=False)
+        d = rng.choice(n_dst, size=s.size, replace=False if s.size <= n_dst else True)
+        srcs.append(s)
+        dsts.append(d)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    key = dst.astype(np.int64) * n_src + src
+    _, idx = np.unique(key, return_index=True)
+    return BipartiteEdges(src[idx], dst[idx], n_src, n_dst)
 
 
 def run(smoke: bool = False) -> list:
     rows = []
     rng = np.random.default_rng(0)
+    f = 128
+    itemsize = 4
+
+    # -- column sweep across the old 8 MiB resident-column cliff ---------
+    # (n_src, src tiles hit, edges per tile); col bytes = n_src_pad * 128 * 4
+    if smoke:
+        sweep = [(1024, 4, 64), (20480, 12, 64)]          # 0.5 MiB, 10 MiB
+    else:
+        sweep = [
+            (8192, 24, 96),    # 4 MiB: below the old cliff
+            (16384, 24, 96),   # 8 MiB: at the old cliff
+            (20480, 24, 96),   # 10 MiB: above — old formula fell back
+            (65536, 24, 96),   # 32 MiB: far above
+        ]
+    cells = []
+    for n_src, tiles_hit, per_tile in sweep:
+        n_dst = 256
+        e = _clustered_bipartite(n_src, n_dst, tiles_hit, per_tile, rng)
+        layer = PackedLayer.from_edges(e)
+        x = jnp.asarray(rng.standard_normal((n_src, f)).astype(np.float32))
+        n_src_pad = layer.bsb.n_src_tiles * TILE
+        col_bytes = n_src_pad * f * itemsize
+        old_fits = _old_fits(n_src_pad, f, f, itemsize)
+        backend_auto = resolve_backend("auto", f, f, itemsize)
+        t_packed = time_call(lambda: bitmap_spmm(layer, x, backend="pallas"))
+        t_xla = time_call(lambda: bitmap_spmm(layer, x, backend="xla"))
+        y_p = np.asarray(bitmap_spmm(layer, x, backend="pallas"))
+        y_x = np.asarray(bitmap_spmm(layer, x, backend="xla"))
+        assert np.allclose(y_p, y_x, atol=1e-3), "packed != segment path"
+        cells.append(
+            {
+                "n_src": int(n_src),
+                "col_mib": col_bytes / 2**20,
+                "edges": int(e.n_edges),
+                "slots": int(layer.bsb.n_slots),
+                "backend_auto": backend_auto,
+                "old_formula_backend": "pallas" if old_fits else "xla",
+                "t_packed_us": t_packed * 1e6,
+                "t_xla_us": t_xla * 1e6,
+            }
+        )
+        rows.append(
+            (
+                f"spmm_sweep_n{n_src}",
+                t_packed * 1e6,
+                f"col_mib={col_bytes / 2**20:.1f};auto={backend_auto};"
+                f"old_auto={'pallas' if old_fits else 'xla'};"
+                f"t_xla_us={t_xla * 1e6:.1f}",
+            )
+        )
+    fallback_rate_new = sum(c["backend_auto"] != "pallas" for c in cells) / len(cells)
+    fallback_rate_old = sum(
+        c["old_formula_backend"] != "pallas" for c in cells
+    ) / len(cells)
+
+    # -- structural accounting (the roofline terms) ----------------------
     sizes = [(256, 4)] if smoke else [(1024, 12), (2048, 14)]
     for n, density_exp in sizes:
         n_e = n * density_exp
@@ -38,5 +136,47 @@ def run(smoke: bool = False) -> list:
             f"edge_list_bytes={edge_list};blocks={bsb.n_nonzero_blocks};"
             f"max_k={bsb.max_k}",
         ))
+
+    # -- host pack: unbuffered scatter vs sort+reduceat fold --------------
+    # (the sort+fold pays off with edge volume; below ~100k edges the two
+    # are a wash, so the smoke size sits just past the crossover)
+    n_pack = 32768 if smoke else 65536
+    n_e = n_pack * 8
+    key = rng.choice(n_pack * n_pack, size=n_e, replace=False)
+    e = BipartiteEdges(key % n_pack, key // n_pack, n_pack, n_pack)
+    t_scatter = time_call(lambda: pack_bipartite(e, method="scatter"))
+    t_reduceat = time_call(lambda: pack_bipartite(e, method="reduceat"))
+    rows.append(
+        (
+            "pack_scatter", t_scatter * 1e6,
+            f"edges={n_e};method=np.bitwise_or.at",
+        )
+    )
+    rows.append(
+        (
+            "pack_reduceat", t_reduceat * 1e6,
+            f"edges={n_e};speedup={t_scatter / max(t_reduceat, 1e-12):.2f}x",
+        )
+    )
+
+    report = {
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": bool(smoke),
+        "fallback_rate_old_formula": fallback_rate_old,
+        "fallback_rate": fallback_rate_new,
+        "cells": cells,
+        "pack": {
+            "edges": int(n_e),
+            "t_scatter_us": t_scatter * 1e6,
+            "t_reduceat_us": t_reduceat * 1e6,
+            "speedup": t_scatter / max(t_reduceat, 1e-12),
+        },
+    }
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_kernels.json"
+    )
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows.append(("bench_kernels_json", 0.0, f"fallback_rate={fallback_rate_new}"))
     emit(rows)
     return rows

@@ -13,4 +13,20 @@ python -m pytest -q -m tier2
 echo "== smoke benches (every section at toy sizes) =="
 python -m benchmarks.run --smoke
 
+echo "== kernels perf cells (BENCH_kernels.json) =="
+# the full smoke run above already ran the kernels section and wrote the
+# artifact; only assert its cells here (no duplicate interpret-mode sweep)
+python - <<'PY'
+import json
+with open("BENCH_kernels.json") as fh:
+    r = json.load(fh)
+assert "fallback_rate" in r and "cells" in r and "pack" in r, r.keys()
+assert r["fallback_rate"] == 0.0, f"kernel fell back to XLA: {r['cells']}"
+print(
+    f"fallback_rate={r['fallback_rate']} (old formula: "
+    f"{r['fallback_rate_old_formula']}); pack speedup "
+    f"{r['pack']['speedup']:.2f}x over {r['pack']['edges']} edges"
+)
+PY
+
 echo "== all gates passed =="

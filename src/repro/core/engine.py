@@ -40,7 +40,7 @@ import numpy as np
 
 from ..distributed.sharding import shard_frontier
 from .condensed import BipartiteEdges, CondensedGraph, ExpandedGraph
-from .semiring import PLUS_TIMES, Semiring, segment_reduce
+from .semiring import PLUS_TIMES, Semiring, kernelizable, segment_reduce
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .dedup import StreamedCorrection
@@ -49,6 +49,7 @@ __all__ = [
     "DeviceBipartite",
     "DeviceExpanded",
     "DeviceCondensed",
+    "PackedOperands",
     "DevicePackedLayer",
     "DevicePacked",
     "DeviceGraph",
@@ -57,6 +58,16 @@ __all__ = [
     "to_device_packed",
     "propagate",
 ]
+
+# Trace-time evidence that a propagation step dispatched to the Pallas
+# kernel instead of the XLA segment path (asserted by no-fallback tests
+# and reported by benchmarks).  Incremented per layer step at dispatch.
+KERNEL_DISPATCH_COUNT = 0
+
+
+def reset_kernel_dispatch_count() -> None:
+    global KERNEL_DISPATCH_COUNT
+    KERNEL_DISPATCH_COUNT = 0
 
 # A DEDUP-C correction as the engine accepts it: the plain (src, dst,
 # count) triples from build_correction, or the StreamedCorrection wrapper
@@ -133,24 +144,43 @@ class DeviceCondensed:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["src", "dst", "blocks", "bitmaps"],
+    data_fields=["slot_src", "slot_row", "row_start", "row_count", "bitmaps"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class PackedOperands:
+    """One direction's streamed-slot kernel operands (see
+    :class:`repro.kernels.pack.BlockSparseBitmap` for the layout)."""
+
+    slot_src: jnp.ndarray   # (n_slots,) int32
+    slot_row: jnp.ndarray   # (n_slots,) int32
+    row_start: jnp.ndarray  # (n_rt,) int32
+    row_count: jnp.ndarray  # (n_rt,) int32
+    bitmaps: jnp.ndarray    # (n_slots, TILE, WORDS) uint32
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "fwd", "rev"],
     meta_fields=["n_src", "n_dst", "n_src_pad", "n_dst_pad"],
 )
 @dataclasses.dataclass
 class DevicePackedLayer:
-    """One condensed layer in both COO and bit-packed block-ELL form.
+    """One condensed layer in COO plus bit-packed streamed-slot form.
 
     ``src``/``dst`` drive the segment-reduce path (any semiring, any
-    direction).  ``blocks``/``bitmaps`` are the dst-major packed incidence
-    (:mod:`repro.kernels.pack`) consumed by the Pallas SpMM for *forward
-    ring* propagation of batched frontiers; ``None`` when the layer is not
-    packable (duplicate edges, e.g. multiplicity-carrying direct edges).
+    direction).  ``fwd`` is the dst-major packed incidence
+    (:mod:`repro.kernels.pack`) consumed by the Pallas SpMM for batched
+    forward propagation; ``rev`` packs the transposed incidence so
+    ``reverse=True`` steps (HITS, out-degrees) dispatch to the kernel
+    too.  Either is ``None`` when the layer is not packable (duplicate
+    edges, e.g. multiplicity-carrying direct edges).
     """
 
     src: jnp.ndarray
     dst: jnp.ndarray
-    blocks: Optional[jnp.ndarray]      # (n_rt, max_k) int32
-    bitmaps: Optional[jnp.ndarray]     # (n_rt, max_k, TILE, WORDS) uint32
+    fwd: Optional[PackedOperands]
+    rev: Optional[PackedOperands]
     n_src: int
     n_dst: int
     n_src_pad: int
@@ -166,12 +196,13 @@ class DevicePackedLayer:
 class DevicePacked:
     """A :class:`DeviceCondensed` whose layers carry packed SpMM operands.
 
-    Identical propagation semantics; batched (``(n, B)``) forward ring
-    propagation is dispatched to :func:`repro.kernels.bitmap_spmm.
+    Identical propagation semantics; batched (``(n, B)``) steps under any
+    kernelizable semiring (plus-times, min-plus, max-times, or-and), in
+    either direction, are dispatched to :func:`repro.kernels.bitmap_spmm.
     bitmap_spmm_pallas` per layer when ``backend`` resolves to Pallas
     (DESIGN.md §6).  ``backend``: ``'pallas'`` | ``'xla'`` | ``'auto'``
-    (Pallas on TPU when the source feature column fits VMEM, XLA
-    segment-sum otherwise).
+    (Pallas on TPU when the streamed working set fits VMEM — independent
+    of the source count — XLA segment-reduce otherwise).
     """
 
     chains: Tuple[Tuple[DevicePackedLayer, ...], ...]
@@ -275,28 +306,37 @@ def to_device(
     )
 
 
+def _upload_operands(bsb) -> PackedOperands:
+    return PackedOperands(
+        slot_src=jnp.asarray(bsb.slot_src),
+        slot_row=jnp.asarray(bsb.slot_row),
+        row_start=jnp.asarray(bsb.row_start),
+        row_count=jnp.asarray(bsb.row_count),
+        bitmaps=jnp.asarray(bsb.bitmaps),
+    )
+
+
 def _pack_edges(e: BipartiteEdges, dev: DeviceBipartite) -> DevicePackedLayer:
     """``dev`` is the already-uploaded COO layer from :func:`to_device`,
-    reused so the edge arrays cross to the device only once."""
+    reused so the edge arrays cross to the device only once.  Packs both
+    directions: the forward incidence and its transpose (reverse steps)."""
     from ..kernels.pack import TILE, pack_bipartite
 
-    blocks = bitmaps = None
-    n_src_pad = -(-e.n_src // TILE) * TILE
-    n_dst_pad = -(-e.n_dst // TILE) * TILE
+    fwd = rev = None
+    # min one tile each way, matching the pack's pad-slot convention
+    # (BlockSparseBitmap.n_src_tiles): zero-node layers stay kernel-safe
+    n_src_pad = max(-(-e.n_src // TILE), 1) * TILE
+    n_dst_pad = max(-(-e.n_dst // TILE), 1) * TILE
     try:
-        bsb = pack_bipartite(e)
+        fwd = _upload_operands(pack_bipartite(e))
+        rev = _upload_operands(pack_bipartite(e.reversed()))
     except ValueError:
-        bsb = None  # duplicate edges (multiplicity): COO path only
-    if bsb is not None:
-        blocks = jnp.asarray(bsb.blocks)
-        bitmaps = jnp.asarray(bsb.bitmaps)
-        n_src_pad = bsb.n_src_tiles * TILE
-        n_dst_pad = bsb.n_row_tiles * TILE
+        fwd = rev = None  # duplicate edges (multiplicity): COO path only
     return DevicePackedLayer(
         src=dev.src,
         dst=dev.dst,
-        blocks=blocks,
-        bitmaps=bitmaps,
+        fwd=fwd,
+        rev=rev,
         n_src=e.n_src,
         n_dst=e.n_dst,
         n_src_pad=n_src_pad,
@@ -372,49 +412,70 @@ def _kernel_applicable(
     semiring: Semiring,
     reverse: bool,
 ) -> bool:
-    """Static (trace-time) dispatch: batched forward ring steps only.
+    """Static (trace-time) dispatch: batched kernelizable steps, both
+    directions.
 
-    The resident-source-column VMEM budget (DESIGN.md §6) is shared with
+    The streamed-window VMEM footprint (DESIGN.md §6) is shared with
     kernels.ops via kernels.pack (imported lazily — the kernels package
-    pulls in the Pallas stack).  The two 'auto' policies intentionally
+    pulls in the Pallas stack); since the source column is streamed, the
+    formula no longer depends on the source count, so the old 8 MiB
+    resident-column cliff is gone.  The two 'auto' policies intentionally
     differ in one respect: the engine only selects Pallas on a real TPU
     (interpret mode is for explicit backend='pallas' testing), while the
     standalone ops wrapper will run interpret mode anywhere.
     """
-    if reverse or semiring.name != "plus_times" or x.ndim != 2:
+    if x.ndim != 2 or not kernelizable(semiring):
         return False
-    if layer.blocks is None:
+    packed = layer.rev if reverse else layer.fwd
+    if packed is None:
         return False
     if graph.backend == "pallas":
         return True
     if graph.backend == "xla":
         return False
-    from ..kernels.pack import fits_vmem_column
+    from ..kernels.pack import fits_vmem
 
-    fits = fits_vmem_column(
-        layer.n_src_pad, x.shape[1], graph.feature_block, x.dtype.itemsize
+    fits = fits_vmem(
+        x.shape[1],
+        graph.feature_block,
+        x.dtype.itemsize,
+        n_slots=int(packed.slot_src.shape[0]),
     )
     return jax.default_backend() == "tpu" and fits
 
 
 def _packed_layer_spmm(
-    layer: DevicePackedLayer, x: jnp.ndarray, feature_block: int
+    layer: DevicePackedLayer,
+    x: jnp.ndarray,
+    feature_block: int,
+    semiring: Semiring,
+    reverse: bool,
 ) -> jnp.ndarray:
-    """One layer of the factorized SpMM ``Y = B @ X`` on the Pallas kernel."""
+    """One layer of the factorized SpMM ``Y = B ⊕ X`` on the Pallas kernel."""
     from ..kernels.bitmap_spmm import bitmap_spmm_pallas
 
+    global KERNEL_DISPATCH_COUNT
+    KERNEL_DISPATCH_COUNT += 1
+    ops = layer.rev if reverse else layer.fwd
+    n_in_pad = layer.n_dst_pad if reverse else layer.n_src_pad
+    n_out_pad = layer.n_src_pad if reverse else layer.n_dst_pad
+    n_out = layer.n_src if reverse else layer.n_dst
     f = x.shape[1]
     f_pad = -(-f // feature_block) * feature_block
-    xp = jnp.pad(x, ((0, layer.n_src_pad - x.shape[0]), (0, f_pad - f)))
+    xp = jnp.pad(x, ((0, n_in_pad - x.shape[0]), (0, f_pad - f)))
     yp = bitmap_spmm_pallas(
-        layer.blocks,
-        layer.bitmaps,
+        ops.slot_src,
+        ops.slot_row,
+        ops.row_start,
+        ops.row_count,
+        ops.bitmaps,
         xp,
-        n_dst_pad=layer.n_dst_pad,
+        n_dst_pad=n_out_pad,
         feature_block=feature_block,
-        interpret=jax.default_backend() != "tpu",
+        op=semiring.add_kind,
+        zero=float(semiring.zero),
     )
-    return yp[: layer.n_dst, :f]
+    return yp[:n_out, :f]
 
 
 def _layer_propagate(
@@ -427,7 +488,7 @@ def _layer_propagate(
     if isinstance(graph, DevicePacked) and _kernel_applicable(
         graph, edges, x, sr, reverse
     ):
-        return _packed_layer_spmm(edges, x, graph.feature_block)
+        return _packed_layer_spmm(edges, x, graph.feature_block, sr, reverse)
     return _edge_propagate(sr, edges, x, reverse)
 
 

@@ -23,6 +23,8 @@ __all__ = [
     "MIN_PLUS",
     "MAX_TIMES",
     "OR_AND",
+    "KERNEL_SEMIRINGS",
+    "kernelizable",
     "segment_reduce",
 ]
 
@@ -85,6 +87,26 @@ OR_AND = Semiring(
     one=1.0,
     idempotent=True,
 )
+
+
+# Semirings the bit-packed Pallas kernel realizes (DESIGN.md §6): over a
+# 0/1 incidence layer ⊗ by the incidence weight (the semiring one) is the
+# identity for all of these, so one kernel step is just the ⊕-reduction —
+# MXU dot for the ring sum, masked select for idempotent min/max.
+KERNEL_SEMIRINGS = frozenset({"plus_times", "min_plus", "max_times", "or_and"})
+
+
+def kernelizable(semiring: Semiring) -> bool:
+    """Whether one propagation step of this semiring can dispatch to the
+    bit-packed SpMM kernel (``repro.kernels.bitmap_spmm``).  The kernel
+    reduces plain gathered sources — correct exactly when ``mul(x, one)``
+    is ``x``, which holds for every registered semiring; unknown semirings
+    conservatively stay on the segment-reduce path."""
+    return semiring.name in KERNEL_SEMIRINGS and semiring.add_kind in (
+        "sum",
+        "min",
+        "max",
+    )
 
 
 def segment_reduce(

@@ -3,6 +3,18 @@ SpMM.  ``bitmap_spmm.py`` (pl.pallas_call + BlockSpec VMEM tiling, the
 BITMAP representation reborn as bit-packed block-sparse MXU operands),
 ``ops.py`` (jit wrappers + XLA fallback), ``ref.py`` (pure-jnp oracles),
 ``pack.py`` (host-side packing)."""
-from .ops import PackedLayer, bitmap_spmm, condensed_two_hop, pack_layer
+from .ops import (
+    PackedLayer,
+    bitmap_spmm,
+    condensed_two_hop,
+    pack_layer,
+    resolve_backend,
+)
 
-__all__ = ["PackedLayer", "bitmap_spmm", "condensed_two_hop", "pack_layer"]
+__all__ = [
+    "PackedLayer",
+    "bitmap_spmm",
+    "condensed_two_hop",
+    "pack_layer",
+    "resolve_backend",
+]

@@ -1,84 +1,216 @@
 """Pallas TPU kernel: bit-packed block-sparse SpMM (the condensed hot loop).
 
 Computes ``y = B @ x`` where ``B`` is the 0/1 incidence of one condensed
-layer, stored as block-ELL bitmaps (:mod:`repro.kernels.pack`).  Two calls
-realize the paper's 2-hop condensed propagation ``y = B_out (B_in^T x)``
-without ever materializing the expanded adjacency.
+layer, stored as a streamed slot list of bitmap blocks
+(:mod:`repro.kernels.pack`).  Two calls realize the paper's 2-hop condensed
+propagation ``y = B_out (B_in^T x)`` without ever materializing the
+expanded adjacency.
 
 TPU mapping (see DESIGN.md §6):
 
-* grid = (dst row-tiles, feature tiles); each cell owns a (128, Fb) output
-  tile in VMEM — MXU-aligned.
-* the k-loop walks that row-tile's nonzero source blocks; bitmaps
-  (128 x 4 uint32 = 2 KiB) are unpacked in-register into a dense 128x128
-  0/1 MXU operand — 32x less HBM traffic than an f32 block.
-* the source feature column (n_src_pad, Fb) resides in VMEM; source tiles
-  are fetched with dynamic slices (``pl.ds``) indexed by the block table
-  (data-dependent gather at tile granularity — TPU-friendly).
-
-VMEM budget per grid cell ~= n_src_pad*Fb*4 + max_k*2KiB + 2*128*Fb*4;
-``ops.bitmap_spmm`` falls back to the XLA segment-sum path when the
-source column exceeds the VMEM budget.
+* grid = (feature tiles, slots); the inner axis walks the packed slot
+  stream — sorted by (dst row tile, src tile) — so the Pallas pipeline
+  streams one (128, Fb) source tile per step through a double-buffered
+  VMEM window (tile t+1 is fetched while the MXU consumes tile t).
+  Per-cell VMEM is O(window), independent of n_src: no resident source
+  column, no 8 MiB cliff.
+* the slot tables (``slot_src``, ``slot_row``) and the per-row-tile
+  (start, count) run table are scalar-prefetched into SMEM; the BlockSpec
+  index maps read them to route each slot's source tile and output tile —
+  a data-dependent gather at tile granularity, which is the TPU-friendly
+  kind.
+* bitmaps (128 x 4 uint32 = 2 KiB) are unpacked in-register into a dense
+  128x128 0/1 operand — 32x less HBM traffic than an f32 block.
+* a (128, Fb) f32 VMEM scratch accumulates across a row tile's slots; the
+  run table marks the first slot (init) and last slot (write-out), so
+  each output tile is written exactly once.
+* ``op`` selects the ⊕-reduction: ``'sum'`` feeds the MXU
+  (``jnp.dot(mask, x)``); ``'min'``/``'max'`` run the idempotent-semiring
+  variant — masked select over column chunks on the VPU, so min-plus /
+  max-times / or-and propagation (batched BFS, reachability) runs packed
+  too, and ``inf`` frontiers never meet a multiply.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from .pack import STREAM_CHUNK as _CHUNK
 from .pack import TILE, WORDS
 
-__all__ = ["bitmap_spmm_pallas"]
+__all__ = ["bitmap_spmm_pallas", "default_interpret"]
+
+# _CHUNK: column chunk width of the masked-select reduction (min/max
+# ops); lives in pack so the shared footprint formula sizes the
+# (TILE, _CHUNK, Fb) select intermediate (~512 KiB at Fb=128).
 
 
-def _kernel(blocks_ref, bitmaps_ref, x_ref, y_ref, *, max_k: int):
-    """One (row-tile, feature-tile) output block."""
-    fb = y_ref.shape[-1]
+def default_interpret() -> bool:
+    """Interpret mode policy: compiled on TPU, interpreted elsewhere.
 
-    def body(k, acc):
-        b = blocks_ref[0, k]
-        xb = x_ref[pl.ds(b * TILE, TILE), :]  # (T, Fb) dynamic tile gather
-        words = bitmaps_ref[0, k]  # (T, WORDS) uint32
-        shifts = jax.lax.broadcasted_iota(jnp.uint32, (TILE, WORDS, 32), 2)
-        bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
-        mask = bits.reshape(TILE, TILE).astype(xb.dtype)
-        return acc + jnp.dot(mask, xb, preferred_element_type=jnp.float32)
+    Override with ``REPRO_PALLAS_INTERPRET=0|1`` (forcing compiled mode on
+    a non-TPU backend will fail inside Mosaic — it exists for TPU hosts
+    whose default backend is not the TPU plugin).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
-    acc = jnp.zeros((TILE, fb), dtype=jnp.float32)
-    acc = jax.lax.fori_loop(0, max_k, body, acc)
-    y_ref[...] = acc.astype(y_ref.dtype)
+
+def _unpack_bits(words: jnp.ndarray) -> jnp.ndarray:
+    """(TILE, WORDS) uint32 -> (TILE, TILE) 0/1 uint32, in-register."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (TILE, WORDS, 32), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(TILE, TILE)
+
+
+def _kernel(
+    slot_src_ref,   # scalar prefetch: (n_slots,) source tile per slot
+    slot_row_ref,   # scalar prefetch: (n_slots,) dst row tile per slot
+    row_start_ref,  # scalar prefetch: (n_rt,) run table starts
+    row_count_ref,  # scalar prefetch: (n_rt,) run table counts
+    bitmaps_ref,    # (1, TILE, WORDS) current slot's bitmap
+    x_ref,          # (TILE, Fb) current source tile (streamed window)
+    y_ref,          # (TILE, Fb) output tile of the slot's row
+    acc_ref,        # VMEM scratch: (TILE, Fb) f32 accumulator
+    *,
+    op: str,
+    zero: float,
+):
+    s = pl.program_id(1)
+    row = slot_row_ref[s]
+    start = row_start_ref[row]
+    first = s == start
+    last = s == start + row_count_ref[row] - 1
+    init = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}[op]
+
+    @pl.when(first)
+    def _():
+        acc_ref[...] = jnp.full(acc_ref.shape, init, acc_ref.dtype)
+
+    bits = _unpack_bits(bitmaps_ref[0])
+    if op == "sum":
+        mask = bits.astype(x_ref.dtype)
+        acc_ref[...] += jnp.dot(
+            mask, x_ref[...], preferred_element_type=jnp.float32
+        )
+    else:
+        m = bits != 0
+        xf = x_ref[...].astype(jnp.float32)
+        fill = jnp.inf if op == "min" else -jnp.inf
+        combine = jnp.minimum if op == "min" else jnp.maximum
+        reduce_ = jnp.min if op == "min" else jnp.max
+
+        def body(c, acc):
+            mc = jax.lax.dynamic_slice_in_dim(m, c * _CHUNK, _CHUNK, axis=1)
+            xc = jax.lax.dynamic_slice_in_dim(xf, c * _CHUNK, _CHUNK, axis=0)
+            vals = jnp.where(mc[:, :, None], xc[None, :, :], fill)
+            return combine(acc, reduce_(vals, axis=1))
+
+        acc_ref[...] = jax.lax.fori_loop(0, TILE // _CHUNK, body, acc_ref[...])
+
+    @pl.when(last)
+    def _():
+        out = acc_ref[...]
+        # rows with no incident sources take the semiring zero, matching
+        # the segment-reduce path's empty-segment convention
+        if op == "min":
+            out = jnp.where(jnp.isposinf(out), jnp.float32(zero), out)
+        elif op == "max":
+            out = jnp.where(jnp.isneginf(out), jnp.float32(zero), out)
+        y_ref[...] = out.astype(y_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_dst_pad", "feature_block", "interpret")
+    jax.jit,
+    static_argnames=("n_dst_pad", "feature_block", "op", "zero", "interpret"),
 )
+def _bitmap_spmm_pallas(
+    slot_src: jnp.ndarray,
+    slot_row: jnp.ndarray,
+    row_start: jnp.ndarray,
+    row_count: jnp.ndarray,
+    bitmaps: jnp.ndarray,
+    x: jnp.ndarray,
+    n_dst_pad: int,
+    feature_block: int,
+    op: str,
+    zero: float,
+    interpret: bool,
+) -> jnp.ndarray:
+    n_slots = slot_src.shape[0]
+    n_src_pad, f = x.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(f // feature_block, n_slots),
+        in_specs=[
+            pl.BlockSpec(
+                (1, TILE, WORDS), lambda j, s, ss, sr, rs, rc: (s, 0, 0)
+            ),
+            pl.BlockSpec(
+                (TILE, feature_block),
+                lambda j, s, ss, sr, rs, rc: (ss[s], j),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (TILE, feature_block), lambda j, s, ss, sr, rs, rc: (sr[s], j)
+        ),
+        scratch_shapes=[pltpu.VMEM((TILE, feature_block), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, zero=zero),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst_pad, f), x.dtype),
+        interpret=interpret,
+    )(slot_src, slot_row, row_start, row_count, bitmaps, x)
+
+
 def bitmap_spmm_pallas(
-    blocks: jnp.ndarray,     # (n_rt, max_k) int32
-    bitmaps: jnp.ndarray,    # (n_rt, max_k, TILE, WORDS) uint32
-    x: jnp.ndarray,          # (n_src_pad, F) — n_src_pad, F multiples of TILE granularity
+    slot_src: jnp.ndarray,   # (n_slots,) int32
+    slot_row: jnp.ndarray,   # (n_slots,) int32
+    row_start: jnp.ndarray,  # (n_rt,) int32
+    row_count: jnp.ndarray,  # (n_rt,) int32
+    bitmaps: jnp.ndarray,    # (n_slots, TILE, WORDS) uint32
+    x: jnp.ndarray,          # (n_src_pad, F); TILE/feature_block multiples
     n_dst_pad: int,
     feature_block: int = 128,
-    interpret: bool = True,
+    op: str = "sum",
+    zero: float = 0.0,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    n_rt, max_k = blocks.shape
+    """Streamed bit-packed SpMM: ``y = B ⊕ x`` over one packed incidence.
+
+    ``op``/``zero`` come from the semiring's ``add_kind``/``zero``
+    (``'sum'`` = plus-times on the MXU; ``'min'``/``'max'`` = idempotent
+    masked select).  ``interpret=None`` auto-selects compiled mode on TPU
+    and interpret mode elsewhere (:func:`default_interpret`).
+    """
+    if op not in ("sum", "min", "max"):
+        raise ValueError(f"unknown kernel op {op!r}")
     n_src_pad, f = x.shape
     if n_dst_pad % TILE or f % feature_block or n_src_pad % TILE:
         raise ValueError(
             f"padded dims required: n_dst_pad={n_dst_pad}, f={f}, "
             f"n_src_pad={n_src_pad} (TILE={TILE}, fb={feature_block})"
         )
-    grid = (n_rt, f // feature_block)
-    return pl.pallas_call(
-        functools.partial(_kernel, max_k=max_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, max_k), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, max_k, TILE, WORDS), lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((n_src_pad, feature_block), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((TILE, feature_block), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((n_dst_pad, f), x.dtype),
-        interpret=interpret,
-    )(blocks, bitmaps, x)
+    if interpret is None:
+        interpret = default_interpret()
+    return _bitmap_spmm_pallas(
+        slot_src,
+        slot_row,
+        row_start,
+        row_count,
+        bitmaps,
+        x,
+        n_dst_pad=n_dst_pad,
+        feature_block=feature_block,
+        op=op,
+        zero=float(zero),
+        interpret=bool(interpret),
+    )

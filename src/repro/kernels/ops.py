@@ -1,45 +1,62 @@
 """Jit'd public wrappers around the Pallas kernels with XLA fallback.
 
-``bitmap_spmm``       one condensed layer:  y = B @ x
+``bitmap_spmm``       one condensed layer:  y = B ⊕ x (any kernel semiring)
 ``condensed_two_hop`` the paper's hot loop: y = B_out @ (B_in @ x)
 
-Backend selection: ``backend='pallas'`` uses the bit-packed MXU kernel
-(interpret mode on CPU, compiled on TPU); ``'xla'`` uses the
-gather/segment-sum path; ``'auto'`` picks pallas when the source feature
-column fits the VMEM budget.
+Backend selection: ``backend='pallas'`` uses the bit-packed streamed MXU
+kernel (compiled on TPU, interpret mode elsewhere); ``'xla'`` uses the
+gather/segment-reduce path; ``'auto'`` picks pallas whenever the kernel's
+*streamed* working set fits VMEM (:func:`repro.kernels.pack.fits_vmem`) —
+since the source column is streamed, this no longer depends on the source
+count, so arbitrarily tall source columns dispatch to the kernel.
+``reverse=True`` propagates along transposed edges using the reverse
+packing carried by :class:`PackedLayer`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.condensed import BipartiteEdges
+from ..core.semiring import PLUS_TIMES, Semiring, kernelizable
 from .bitmap_spmm import bitmap_spmm_pallas
-from .pack import TILE, BlockSparseBitmap, fits_vmem_column, pack_bipartite
-from .ref import segment_spmm_ref
+from .pack import TILE, BlockSparseBitmap, fits_vmem, pack_bipartite
+from .ref import segment_semiring_ref
 
-__all__ = ["PackedLayer", "pack_layer", "bitmap_spmm", "condensed_two_hop"]
-
+__all__ = [
+    "PackedLayer",
+    "pack_layer",
+    "bitmap_spmm",
+    "condensed_two_hop",
+    "resolve_backend",
+]
 
 
 @dataclasses.dataclass
 class PackedLayer:
-    """Both kernel operands for one bipartite layer."""
+    """Both kernel operands for one bipartite layer, in both directions.
+
+    ``bsb`` is the dst-major forward packing (``y = B @ x``); ``bsb_rev``
+    packs the transposed incidence so ``reverse=True`` (HITS, out-degrees)
+    dispatches to the kernel too instead of being segment-only.
+    """
 
     bsb: BlockSparseBitmap
+    bsb_rev: Optional[BlockSparseBitmap]
     src: jnp.ndarray
     dst: jnp.ndarray
     n_src: int
     n_dst: int
 
     @classmethod
-    def from_edges(cls, edges: BipartiteEdges) -> "PackedLayer":
+    def from_edges(
+        cls, edges: BipartiteEdges, with_reverse: bool = True
+    ) -> "PackedLayer":
         return cls(
             bsb=pack_bipartite(edges),
+            bsb_rev=pack_bipartite(edges.reversed()) if with_reverse else None,
             src=jnp.asarray(edges.src, dtype=jnp.int32),
             dst=jnp.asarray(edges.dst, dtype=jnp.int32),
             n_src=edges.n_src,
@@ -51,14 +68,62 @@ def pack_layer(edges: BipartiteEdges) -> PackedLayer:
     return PackedLayer.from_edges(edges)
 
 
-def _pad_rows(x: jnp.ndarray, n: int) -> jnp.ndarray:
-    pad = n - x.shape[0]
-    return x if pad == 0 else jnp.pad(x, ((0, pad), (0, 0)))
+def resolve_backend(
+    backend: str,
+    n_features: int,
+    feature_block: int,
+    itemsize: int,
+    semiring: Semiring = PLUS_TIMES,
+    packable: bool = True,
+    n_slots: Optional[int] = None,
+) -> str:
+    """The one 'auto' resolution both dispatch sites agree on: pallas when
+    the layer is packed, the semiring is kernelizable, and the streamed
+    working set fits VMEM (plus the SMEM slot tables, when ``n_slots`` is
+    known); xla otherwise.  Exposed so tests and benchmarks can assert
+    no-fallback without running the kernel."""
+    if backend != "auto":
+        return backend
+    if not packable or not kernelizable(semiring):
+        return "xla"
+    return (
+        "pallas"
+        if fits_vmem(n_features, feature_block, itemsize, n_slots=n_slots)
+        else "xla"
+    )
 
 
-def _pad_cols(x: jnp.ndarray, m: int) -> jnp.ndarray:
-    pad = m - x.shape[1]
-    return x if pad == 0 else jnp.pad(x, ((0, 0), (0, pad)))
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    return x if pr == 0 and pc == 0 else jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _pallas_spmm(
+    bsb: BlockSparseBitmap,
+    x: jnp.ndarray,
+    feature_block: int,
+    semiring: Semiring,
+    interpret: Optional[bool],
+) -> jnp.ndarray:
+    f = x.shape[1]
+    f_pad = -(-f // feature_block) * feature_block
+    n_src_pad = bsb.n_src_tiles * TILE
+    n_dst_pad = bsb.n_row_tiles * TILE
+    xp = _pad_to(x, n_src_pad, f_pad)
+    yp = bitmap_spmm_pallas(
+        jnp.asarray(bsb.slot_src),
+        jnp.asarray(bsb.slot_row),
+        jnp.asarray(bsb.row_start),
+        jnp.asarray(bsb.row_count),
+        jnp.asarray(bsb.bitmaps),
+        xp,
+        n_dst_pad=n_dst_pad,
+        feature_block=feature_block,
+        op=semiring.add_kind,
+        zero=float(semiring.zero),
+        interpret=interpret,
+    )
+    return yp[: bsb.n_dst, :f]
 
 
 def bitmap_spmm(
@@ -67,34 +132,41 @@ def bitmap_spmm(
     backend: str = "auto",
     feature_block: int = 128,
     interpret: Optional[bool] = None,
+    semiring: Semiring = PLUS_TIMES,
+    reverse: bool = False,
 ) -> jnp.ndarray:
-    """y[dst] = sum over edges of x[src]; x may be (n_src,) or (n_src, F)."""
+    """y[dst] = ⊕ over edges of x[src]; x may be (n_src,) or (n_src, F).
+
+    ``reverse=True`` flips the edge direction (x indexed by dst, output
+    over src) using the transposed packing.  ``semiring`` selects the
+    ⊕-reduction; idempotent min/max run the masked-select kernel variant.
+    """
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
-    n_src_pad = -(-layer.n_src // TILE) * TILE
-    f_pad = -(-x.shape[1] // feature_block) * feature_block
-    if backend == "auto":
-        fits = fits_vmem_column(
-            n_src_pad, x.shape[1], feature_block, x.dtype.itemsize
-        )
-        backend = "pallas" if fits else "xla"
+    bsb = layer.bsb_rev if reverse else layer.bsb
+    backend = resolve_backend(
+        backend,
+        x.shape[1],
+        feature_block,
+        x.dtype.itemsize,
+        semiring=semiring,
+        packable=bsb is not None,
+        n_slots=bsb.n_slots if bsb is not None else None,
+    )
     if backend == "xla":
-        y = segment_spmm_ref(layer.src, layer.dst, x, layer.n_dst)
+        src, dst = (layer.dst, layer.src) if reverse else (layer.src, layer.dst)
+        n_out = layer.n_src if reverse else layer.n_dst
+        y = segment_semiring_ref(src, dst, x, n_out, semiring=semiring)
     elif backend == "pallas":
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        xp = _pad_cols(_pad_rows(x, n_src_pad), f_pad)
-        n_dst_pad = layer.bsb.n_row_tiles * TILE
-        yp = bitmap_spmm_pallas(
-            jnp.asarray(layer.bsb.blocks),
-            jnp.asarray(layer.bsb.bitmaps),
-            xp,
-            n_dst_pad=n_dst_pad,
-            feature_block=feature_block,
-            interpret=interpret,
-        )
-        y = yp[: layer.n_dst, : x.shape[1]]
+        if bsb is None:
+            raise ValueError(
+                "reverse=True needs the transposed packing; build the "
+                "layer with PackedLayer.from_edges(..., with_reverse=True)"
+                if reverse
+                else "layer has no packing"
+            )
+        y = _pallas_spmm(bsb, x, feature_block, semiring, interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return y[:, 0] if squeeze else y

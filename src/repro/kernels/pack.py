@@ -7,16 +7,24 @@ as a 128x4 uint32 bitmap (2 KiB instead of 64 KiB f32).  The Pallas kernel
 unpacks a block's bits in VMEM and feeds the MXU with a dense 128x128
 operand — bandwidth-compressed SpMM (see DESIGN.md §6).
 
-Layout (block-ELL):
-    blocks  : (n_row_tiles, max_k) int32   — source-tile index per slot
-    bitmaps : (n_row_tiles, max_k, TILE, TILE//32) uint32
-    nnz slots are left-justified; padding slots have block id 0 and
-    all-zero bitmaps (mathematically inert).
+Layout (streamed slot list + run table):
+    slot_src  : (n_slots,) int32  — source-tile index per nonzero block
+    slot_row  : (n_slots,) int32  — dst row-tile index per nonzero block
+    bitmaps   : (n_slots, TILE, TILE//32) uint32
+    row_start : (n_row_tiles,) int32 — first slot of each row tile
+    row_count : (n_row_tiles,) int32 — slots in each row tile
+
+Slots are sorted by (row tile, source tile), so the kernel's inner grid
+axis walks each row tile's source blocks as one contiguous, monotonically
+increasing run — the access pattern the Pallas pipeline double-buffers
+(DESIGN.md §6).  Every row tile owns at least one slot (empty rows get a
+single all-zero pad bitmap, mathematically inert) so each output tile is
+visited and written exactly once per feature tile.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -25,109 +33,258 @@ from ..core.condensed import BipartiteEdges
 TILE = 128
 WORDS = TILE // 32
 
-# VMEM budget for the kernel's resident source column (bytes); practical
-# budget 8 MiB.  Lives here (numpy-only module) so both auto-dispatchers
-# (kernels.ops.bitmap_spmm and core.engine) share it without the engine
+# Per-grid-cell VMEM working-set budget (bytes).  Lives here (numpy-only
+# module) so both auto-dispatchers (kernels.ops.bitmap_spmm and
+# core.engine._kernel_applicable) share one formula without the engine
 # importing the Pallas stack.
-_VMEM_COLUMN_BUDGET = 8 * 2**20
+_VMEM_BUDGET = 8 * 2**20
+
+# Scalar-prefetch budget (bytes): the slot/run tables land in SMEM,
+# which is far smaller than VMEM.  Conservative cap; graphs with more
+# nonzero blocks than this fall back to the segment path instead of
+# failing inside Mosaic.
+_SMEM_BUDGET = 256 * 2**10
+
+# Pipeline depth: Pallas double-buffers each streamed input block (fetch
+# tile t+1 while the MXU consumes tile t).
+_STREAM_WINDOW = 2
+
+# Column chunk width of the kernel's min/max masked-select reduction
+# (bitmap_spmm imports it from here): sizes the (TILE, CHUNK, Fb) select
+# intermediate that the footprint formula must account for.
+STREAM_CHUNK = 8
+
+# Bit-field widths of pack_bipartite's combined sort key; derived from
+# the tile constants so the layout can't silently drift from them.
+_R_BITS = TILE.bit_length() - 1          # row-in-tile
+_W_BITS = WORDS.bit_length() - 1         # word-in-row
+_B_BITS = 5                              # bit-in-word (uint32)
+
+__all__ = [
+    "BlockSparseBitmap",
+    "pack_bipartite",
+    "streamed_footprint_bytes",
+    "fits_vmem",
+    "TILE",
+    "WORDS",
+]
 
 
-def fits_vmem_column(
-    n_src_pad: int, n_features: int, feature_block: int, itemsize: int
+def streamed_footprint_bytes(
+    n_features: int, feature_block: int, itemsize: int
+) -> int:
+    """Per-grid-cell VMEM working set of the streamed kernel, in bytes.
+
+    The source column is *streamed* through a double-buffered window of
+    one (TILE, feature_block) tile, so — unlike the old resident-column
+    formula — the footprint is independent of ``n_src``: window (x2
+    buffers) + bitmap slot (x2) + output tile (x2) + f32 accumulator.
+    ``n_features`` is accepted (both dispatchers know it) but intentionally
+    unused: streaming removed the source-count *and* feature-count terms —
+    only the ``feature_block`` tile width matters.
+    """
+    del n_features  # the streamed window is one feature_block tile wide
+    x_tile = TILE * feature_block * itemsize
+    bitmap_slot = TILE * WORDS * 4
+    out_tile = TILE * feature_block * itemsize
+    acc = TILE * feature_block * 4
+    # kernel-body intermediates, whichever op variant is larger: the
+    # unpacked dense 0/1 mask (sum) vs the (TILE, CHUNK, Fb) f32 select
+    # of the min/max path — without these the formula re-grows a cliff
+    # at wide feature blocks
+    body = max(TILE * TILE * 4, TILE * STREAM_CHUNK * feature_block * 4)
+    return _STREAM_WINDOW * (x_tile + bitmap_slot + out_tile) + acc + body
+
+
+def fits_vmem(
+    n_features: int,
+    feature_block: int,
+    itemsize: int,
+    n_slots: Optional[int] = None,
 ) -> bool:
-    """Whether the kernel's resident source column fits the VMEM budget —
-    the one fits formula both auto-dispatchers must agree on."""
-    f_pad = -(-n_features // feature_block) * feature_block
-    return n_src_pad * f_pad * itemsize <= _VMEM_COLUMN_BUDGET
-
-__all__ = ["BlockSparseBitmap", "pack_bipartite", "TILE", "WORDS"]
+    """Whether the streamed kernel's working set fits the VMEM budget —
+    the one fits formula both auto-dispatchers must agree on.  With the
+    source column streamed this no longer depends on the source count, so
+    graphs far above the old 8 MiB resident-column cliff still dispatch
+    to the kernel.  ``n_slots`` (when the caller knows it) guards the one
+    remaining size-dependent operand: the scalar-prefetched slot/run
+    tables, which live in SMEM — four int32 tables bounded by ``n_slots``
+    entries each.
+    """
+    if n_slots is not None and 4 * n_slots * 4 > _SMEM_BUDGET:
+        return False
+    return (
+        streamed_footprint_bytes(n_features, feature_block, itemsize)
+        <= _VMEM_BUDGET
+    )
 
 
 @dataclasses.dataclass
 class BlockSparseBitmap:
     """Destination-major packed incidence: rows = dst, cols = src."""
 
-    blocks: np.ndarray     # (n_row_tiles, max_k) int32
-    bitmaps: np.ndarray    # (n_row_tiles, max_k, TILE, WORDS) uint32
+    slot_src: np.ndarray   # (n_slots,) int32
+    slot_row: np.ndarray   # (n_slots,) int32
+    bitmaps: np.ndarray    # (n_slots, TILE, WORDS) uint32
+    row_start: np.ndarray  # (n_row_tiles,) int32
+    row_count: np.ndarray  # (n_row_tiles,) int32
     n_dst: int             # logical rows
     n_src: int             # logical cols
 
     @property
+    def n_slots(self) -> int:
+        return int(self.slot_src.shape[0])
+
+    @property
     def n_row_tiles(self) -> int:
-        return int(self.blocks.shape[0])
+        return int(self.row_start.shape[0])
 
     @property
     def max_k(self) -> int:
-        return int(self.blocks.shape[1])
+        return int(self.row_count.max()) if self.row_count.size else 0
 
     @property
     def n_src_tiles(self) -> int:
-        return -(-self.n_src // TILE)
+        # min 1, matching pack_bipartite's n_st: pad slots index source
+        # tile 0, so a zero-source layer must still pad x to one (inert,
+        # all-zero) tile instead of handing the kernel a 0-row operand
+        return max(-(-self.n_src // TILE), 1)
 
     @property
     def n_nonzero_blocks(self) -> int:
-        return int((self.bitmaps.any(axis=(2, 3))).sum())
+        return int((self.bitmaps.any(axis=(1, 2))).sum())
 
     def nbytes(self) -> int:
-        return int(self.blocks.nbytes + self.bitmaps.nbytes)
+        return int(
+            self.slot_src.nbytes
+            + self.slot_row.nbytes
+            + self.bitmaps.nbytes
+            + self.row_start.nbytes
+            + self.row_count.nbytes
+        )
 
     def to_dense(self) -> np.ndarray:
         """Oracle helper: dense (n_dst_pad, n_src_pad) 0/1 matrix."""
-        n_rt, mk = self.blocks.shape
-        dense = np.zeros((n_rt * TILE, self.n_src_tiles * TILE), dtype=np.float32)
+        dense = np.zeros(
+            (self.n_row_tiles * TILE, self.n_src_tiles * TILE), dtype=np.float32
+        )
         shifts = np.arange(32, dtype=np.uint32)
-        for i in range(n_rt):
-            for k in range(mk):
-                w = self.bitmaps[i, k]
-                if not w.any():
-                    continue
-                bits = ((w[:, :, None] >> shifts) & 1).reshape(TILE, TILE)
-                b = int(self.blocks[i, k])
-                dense[i * TILE : (i + 1) * TILE, b * TILE : (b + 1) * TILE] += bits
+        for s in range(self.n_slots):
+            w = self.bitmaps[s]
+            if not w.any():
+                continue
+            bits = ((w[:, :, None] >> shifts) & 1).reshape(TILE, TILE)
+            i = int(self.slot_row[s])
+            b = int(self.slot_src[s])
+            dense[i * TILE : (i + 1) * TILE, b * TILE : (b + 1) * TILE] += bits
         return dense
 
 
-def pack_bipartite(edges: BipartiteEdges) -> BlockSparseBitmap:
+def pack_bipartite(
+    edges: BipartiteEdges, method: str = "reduceat"
+) -> BlockSparseBitmap:
     """Pack dst-major: y[dst] += x[src]  ==  y = B @ x with B[dst, src]=1.
 
     Duplicate (src, dst) pairs are rejected — a bitmap holds one bit per
     cell (condensed incidence layers are duplicate-free by construction;
     multiplicity lives across *paths*, not within a layer).
+
+    ``method`` selects the fold strategy: ``'reduceat'`` (default) sorts
+    edges once by a combined (block, row, word, bit) key — that single
+    sort yields the duplicate check, the block grouping, *and* the word
+    runs, folded with one buffered ``np.bitwise_or.reduceat`` pass;
+    ``'scatter'`` is the original algorithm (two ``np.unique`` sorts plus
+    an unbuffered ``np.bitwise_or.at`` scatter), kept as the before/after
+    baseline for ``benchmarks/bench_kernels.py``.
     """
+    if method not in ("reduceat", "scatter"):
+        raise ValueError(f"unknown pack method {method!r}")
     src = edges.src
     dst = edges.dst
-    key = dst.astype(np.int64) * edges.n_src + src
-    if np.unique(key).size != key.size:
-        raise ValueError("pack_bipartite requires duplicate-free edges")
-
-    n_rt = -(-edges.n_dst // TILE)
+    n_rt = max(-(-edges.n_dst // TILE), 1)
+    n_st = max(-(-edges.n_src // TILE), 1)
     bd = dst // TILE
     bs = src // TILE
-    # unique (row_tile, src_tile) blocks
-    bkey = bd.astype(np.int64) * (edges.n_src // TILE + 1) + bs
-    uniq, inv = np.unique(bkey, return_inverse=True)
-    ub_rows = (uniq // (edges.n_src // TILE + 1)).astype(np.int64)
-    ub_cols = (uniq % (edges.n_src // TILE + 1)).astype(np.int64)
-    # slot within row tile: rank of block among its row's blocks
-    counts = np.bincount(ub_rows, minlength=n_rt)
-    max_k = max(int(counts.max()) if counts.size else 0, 1)
-    slot_of_block = np.zeros(uniq.size, dtype=np.int64)
-    # uniq sorted => blocks grouped by row already
-    row_starts = np.searchsorted(ub_rows, np.arange(n_rt))
-    slot_of_block = np.arange(uniq.size) - row_starts[ub_rows]
-
-    blocks = np.zeros((n_rt, max_k), dtype=np.int32)
-    blocks[ub_rows, slot_of_block] = ub_cols.astype(np.int32)
-    bitmaps = np.zeros((n_rt, max_k, TILE, WORDS), dtype=np.uint32)
     r = (dst % TILE).astype(np.int64)
     c = (src % TILE).astype(np.int64)
     word = c // 32
     bit = (c % 32).astype(np.uint32)
-    np.bitwise_or.at(
-        bitmaps,
-        (ub_rows[inv], slot_of_block[inv], r, word),
-        (np.uint32(1) << bit),
-    )
+    bkey = bd.astype(np.int64) * n_st + bs
+
+    if method == "scatter":
+        key = dst.astype(np.int64) * edges.n_src + src
+        if np.unique(key).size != key.size:
+            raise ValueError("pack_bipartite requires duplicate-free edges")
+        uniq, inv = np.unique(bkey, return_inverse=True)
+    else:
+        # one sort does everything: the full key is unique per (src, dst)
+        # cell (duplicate check), its high bits group blocks row-major
+        # with source tiles ascending (the kernel's streaming order), and
+        # its (row, word) middle bits delimit the bitmap-word runs.  All
+        # field widths are powers of two, so packing/unpacking is pure
+        # shift/mask — the residual cost after the scatter is gone.
+        low = _R_BITS + _W_BITS + _B_BITS
+        full = (
+            (bkey << low)
+            | (r << (_W_BITS + _B_BITS))
+            | (word << _B_BITS)
+            | bit
+        )
+        order_e = np.argsort(full, kind="stable")
+        full_s = full[order_e]
+        if full_s.size and np.any(full_s[1:] == full_s[:-1]):
+            raise ValueError("pack_bipartite requires duplicate-free edges")
+        bkey_s = full_s >> low
+        block_bounds = np.flatnonzero(
+            np.r_[True, bkey_s[1:] != bkey_s[:-1]]
+        ) if bkey_s.size else np.empty(0, dtype=np.int64)
+        uniq = bkey_s[block_bounds] if bkey_s.size else np.empty(0, np.int64)
+
+    ub_rows = uniq // n_st
+    ub_cols = uniq % n_st
+    # pad every empty row tile with one all-zero slot so each output tile
+    # is visited (and therefore written) by the kernel
+    counts = np.bincount(ub_rows, minlength=n_rt)
+    empty = np.flatnonzero(counts == 0)
+    all_rows = np.concatenate([ub_rows, empty])
+    all_cols = np.concatenate([ub_cols, np.zeros(empty.size, dtype=np.int64)])
+    order = np.argsort(all_rows, kind="stable")
+    slot_row = all_rows[order].astype(np.int32)
+    slot_src = all_cols[order].astype(np.int32)
+    n_slots = slot_row.size
+    slot_of = np.empty(n_slots, dtype=np.int64)
+    slot_of[order] = np.arange(n_slots)
+
+    row_count = np.bincount(slot_row, minlength=n_rt).astype(np.int32)
+    row_start = np.concatenate(
+        [[0], np.cumsum(row_count[:-1])]
+    ).astype(np.int32)
+
+    flat = np.zeros(n_slots * TILE * WORDS, dtype=np.uint32)
+    if src.size:
+        if method == "scatter":
+            lin = (slot_of[inv] * TILE + r) * WORDS + word
+            np.bitwise_or.at(flat, lin, np.uint32(1) << bit)
+        else:
+            # slot_of is monotone over sorted blocks (pads append after
+            # each row's real slots), so the sorted edge order is also
+            # sorted by (slot, row, word): reduceat folds each word run
+            block_of_edge = np.repeat(
+                slot_of[: uniq.size],
+                np.diff(np.r_[block_bounds, full_s.size]),
+            )
+            rw_s = (full_s >> _B_BITS) & (TILE * WORDS - 1)
+            lin_s = (block_of_edge << (_R_BITS + _W_BITS)) | rw_s
+            starts = np.flatnonzero(np.r_[True, lin_s[1:] != lin_s[:-1]])
+            vals_s = np.uint32(1) << bit[order_e]
+            flat[lin_s[starts]] = np.bitwise_or.reduceat(vals_s, starts)
+    bitmaps = flat.reshape(n_slots, TILE, WORDS)
     return BlockSparseBitmap(
-        blocks=blocks, bitmaps=bitmaps, n_dst=edges.n_dst, n_src=edges.n_src
+        slot_src=slot_src,
+        slot_row=slot_row,
+        bitmaps=bitmaps,
+        row_start=row_start,
+        row_count=row_count,
+        n_dst=edges.n_dst,
+        n_src=edges.n_src,
     )

@@ -5,9 +5,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pack import TILE, WORDS, BlockSparseBitmap
+from ..core.semiring import PLUS_TIMES, Semiring, segment_reduce
+from .pack import BlockSparseBitmap
 
-__all__ = ["bitmap_spmm_ref", "segment_spmm_ref", "two_hop_ref"]
+__all__ = [
+    "bitmap_spmm_ref",
+    "segment_spmm_ref",
+    "segment_semiring_ref",
+    "two_hop_ref",
+]
 
 
 def bitmap_spmm_ref(bsb: BlockSparseBitmap, x: np.ndarray) -> np.ndarray:
@@ -24,6 +30,18 @@ def segment_spmm_ref(
 ) -> jnp.ndarray:
     """Edge-list oracle: y[dst] += x[src] via segment_sum (XLA path)."""
     return jax.ops.segment_sum(jnp.take(x, src, axis=0), dst, num_segments=n_dst)
+
+
+def segment_semiring_ref(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    x: jnp.ndarray,
+    n_dst: int,
+    semiring: Semiring = PLUS_TIMES,
+) -> jnp.ndarray:
+    """Edge-list oracle under any semiring: y[dst] = ⊕ x[src] (the XLA
+    segment-reduce path the kernel must agree with, for min/max too)."""
+    return segment_reduce(semiring, jnp.take(x, src, axis=0), dst, n_dst)
 
 
 def two_hop_ref(

@@ -181,24 +181,41 @@ class GraphQueryServer:
         damping: float = 0.85,
         bfs_max_iters: Optional[int] = None,
         counts_graph: Optional[DeviceGraph] = None,
+        bucket_widths: Tuple[int, ...] = (8, 16, 32),
     ):
         """``graph`` must be duplicate-exact (EXP / DEDUP-C / DEDUP-1) for
         ``'ppr'`` queries; ``'common_neighbors'`` queries are answered from
         ``counts_graph`` (a raw C-DUP, typically kept *with* self loops so
-        the multiplicity signal survives), defaulting to ``graph``."""
+        the multiplicity signal survives), defaulting to ``graph``.
+
+        ``bucket_widths``: flush groups are padded up to the smallest of
+        these fixed widths (capped by ``max_batch``), so live traffic with
+        arbitrary group sizes compiles at most ``len(bucket_widths) + 1``
+        propagation shapes per kind instead of one per distinct B."""
         self.graph = graph
         self.counts_graph = counts_graph if counts_graph is not None else graph
         self.max_batch = int(max_batch)
         self.ppr_iters = int(ppr_iters)
         self.damping = float(damping)
         self.bfs_max_iters = bfs_max_iters
+        widths = sorted({int(w) for w in bucket_widths if 0 < int(w) < self.max_batch})
+        self.bucket_widths: Tuple[int, ...] = tuple(widths) + (self.max_batch,)
         self.pending: List[GraphQuery] = []
         self._pending_qids: set = set()
         # served-traffic accounting (asserted in tests, shown in examples)
         self.n_queries = 0
         self.n_propagation_batches = 0
+        # compile-shape accounting: {padded width: batches answered}
+        self.batch_widths_used: Dict[int, int] = {}
         # set by from_condensed: streaming-correction build evidence
         self.correction_accounting = None
+
+    def _bucket_width(self, b: int) -> int:
+        """Smallest fixed width >= b (groups are pre-chunked to max_batch)."""
+        for w in self.bucket_widths:
+            if b <= w:
+                return w
+        return self.max_batch
 
     @classmethod
     def from_condensed(
@@ -268,8 +285,17 @@ class GraphQueryServer:
 
     def _answer_group(
         self, kind: str, group: List[GraphQuery]
-    ) -> Dict[int, np.ndarray]:
-        sources = jnp.asarray([q.node for q in group], dtype=jnp.int32)
+    ) -> Tuple[Dict[int, np.ndarray], int]:
+        """Returns (answers, padded width) — the width actually compiled,
+        so flush's compile-shape accounting can't drift from the padding
+        decision made here."""
+        # pad the frontier to a fixed bucket width (repeating the first
+        # source — columns are independent, extras are sliced off) so the
+        # batched propagation compiles once per bucket, not per group size
+        width = self._bucket_width(len(group))
+        nodes = [q.node for q in group]
+        nodes += [nodes[0]] * (width - len(nodes))
+        sources = jnp.asarray(nodes, dtype=jnp.int32)
         if kind == "bfs":
             res = algorithms.bfs_multi(
                 self.graph, sources, max_iters=self.bfs_max_iters
@@ -284,7 +310,7 @@ class GraphQueryServer:
         else:  # common_neighbors
             res = algorithms.common_neighbors_multi(self.counts_graph, sources)
         res = np.asarray(res)
-        return {q.qid: res[:, i] for i, q in enumerate(group)}
+        return {q.qid: res[:, i] for i, q in enumerate(group)}, width
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Answer everything queued; returns ``{qid: (n,) result}``."""
@@ -293,15 +319,22 @@ class GraphQueryServer:
         for q in self.pending:
             by_kind.setdefault(q.kind, []).append(q)
         n_batches = 0
+        widths: List[int] = []
         for kind, group in by_kind.items():
             for i in range(0, len(group), self.max_batch):
-                out.update(self._answer_group(kind, group[i : i + self.max_batch]))
+                answers, width = self._answer_group(
+                    kind, group[i : i + self.max_batch]
+                )
+                out.update(answers)
+                widths.append(width)
                 n_batches += 1
         # queue and counters committed only once every group answered, so
         # a failure mid-flush leaves pending intact and counts unchanged
         # for a retry
         self.n_propagation_batches += n_batches
         self.n_queries += len(self.pending)
+        for w in widths:
+            self.batch_widths_used[w] = self.batch_widths_used.get(w, 0) + 1
         self.pending = []
         self._pending_qids = set()
         return out

@@ -259,6 +259,34 @@ def test_graph_query_server_batches_and_answers():
         server.submit(GraphQuery(996, "ppr", 2))
 
 
+def test_graph_query_server_buckets_batch_widths():
+    """Flush groups are padded to fixed widths (8/16/32, capped at
+    max_batch) so live traffic compiles a handful of propagation shapes
+    instead of one per distinct group size — and padding never changes
+    the answers."""
+    rng = np.random.default_rng(21)
+    g = random_membership_graph(30, 10, 4, rng)
+    corr = dedup.build_correction(g)
+    graph = engine.to_device(g, correction=corr)
+    server = GraphQueryServer(graph, max_batch=32)
+    assert server.bucket_widths == (8, 16, 32)
+    # odd group sizes: 5 bfs -> width 8; 11 ppr -> width 16; 1 cn -> 8
+    queries = [GraphQuery(i, "bfs", int(i % 30)) for i in range(5)]
+    queries += [GraphQuery(100 + i, "ppr", int(2 * i % 30)) for i in range(11)]
+    queries += [GraphQuery(200, "common_neighbors", 7)]
+    answers = server.run(queries)
+    assert set(server.batch_widths_used) <= set(server.bucket_widths)
+    assert server.batch_widths_used == {8: 2, 16: 1}
+    # padded columns are sliced off: answers equal the unbatched calls
+    assert np.allclose(answers[0], np.asarray(algorithms.bfs(graph, 0)))
+    assert len(answers) == len(queries)
+    # a tiny max_batch collapses every group to that single width
+    small = GraphQueryServer(graph, max_batch=4)
+    assert small.bucket_widths == (4,)
+    small.run([GraphQuery(i, "bfs", i) for i in range(6)])
+    assert small.batch_widths_used == {4: 2}
+
+
 # ---------------------------------------------------------------------------
 # Sharding rules: logical batch axis resolves, engine is mesh-agnostic
 # ---------------------------------------------------------------------------
