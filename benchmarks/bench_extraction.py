@@ -2,10 +2,16 @@
 
 Reports edges + extraction time for both modes on DBLP / TPCH / UNIV
 relational catalogs (synthetic, paper-shaped; sizes scaled for CPU).
+
+Also exercises the sharded out-of-core pipeline (DESIGN.md §7) on the
+DBLP catalog: for n_shards ∈ {1, 2, 7} the sharded build is *asserted*
+byte-identical to the unsharded one and then re-run under an enforced
+``max_resident_rows`` budget — an assertion failure here fails the whole
+bench section, which is the scripts/check.sh gate for budget accounting.
 """
 from __future__ import annotations
 
-from repro.core import extract
+from repro.core import extract, extract_sharded, graphs_identical
 from repro.data.synth import dblp_catalog, tpch_catalog, univ_catalog
 
 from .common import emit, time_call
@@ -65,5 +71,37 @@ def run(smoke: bool = False) -> list:
                 t_e / max(t_c, 1e-9),
             ),
         ))
+    rows.extend(_sharded_rows(cases[0], repeats))
     emit(rows)
+    return rows
+
+
+def _sharded_rows(dblp_case, repeats: int) -> list:
+    """Sharded-extraction gate (DESIGN.md §7): byte-identity for
+    n_shards ∈ {1, 2, 7} plus an *enforced* peak-resident-rows budget.
+    Raises (failing the bench section, and therefore scripts/check.sh)
+    if the merge step or the budget accounting regresses."""
+    name, cat, q = dblp_case
+    base = extract(cat, q, mode="auto")
+    rows = []
+    for n in (1, 2, 7):
+        probe = extract_sharded(cat, q, n_shards=n)
+        assert graphs_identical(base.graph, probe.graph), (
+            f"sharded extraction (n_shards={n}) is not byte-identical "
+            "to the unsharded build"
+        )
+        peak = probe.budget.peak_resident_rows
+        # re-run with the observed peak as a hard cap: accounting must
+        # stay within it (ExtractionBudgetError would propagate)
+        res = extract_sharded(cat, q, n_shards=n, max_resident_rows=peak)
+        assert res.budget.peak_resident_rows <= peak
+        t_s = time_call(
+            lambda n=n: extract_sharded(cat, q, n_shards=n), repeats=repeats
+        )
+        rows.append((
+            f"extract_{name}_sharded{n}",
+            t_s * 1e6,
+            f"byte_identical=1;peak_resident_rows={peak};"
+            f"budget_enforced={peak}",
+        ))
     return rows

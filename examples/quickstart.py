@@ -1,14 +1,23 @@
 """Quickstart: extract a hidden graph from a relational DB and analyze it.
 
-The paper's end-to-end flow (Fig 1): declare the co-author graph in the
-Datalog DSL, extract it as a *condensed* representation (no quadratic
-join), deduplicate, and run graph algorithms — all in one script.
+The paper's end-to-end flow (Fig 1), with this repo's scaling layers in
+the order you would use them in production: consult the advisor, extract
+*sharded* under a memory budget (DESIGN.md §7 — byte-identical to the
+one-shot build), deduplicate with the DEDUP-C correction, and propagate.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import algorithms, dedup, engine, extract, recommend
+from repro.core import (
+    algorithms,
+    dedup,
+    engine,
+    extract,
+    extract_sharded,
+    graphs_identical,
+    recommend,
+)
 from repro.data.synth import dblp_catalog
 
 QUERY = """
@@ -23,26 +32,35 @@ def main():
                            mean_authors_per_pub=6.0, seed=7)
     print(f"catalog: {catalog.table_names}, {catalog.nbytes()/1e6:.1f} MB")
 
-    # 1. declarative extraction -> condensed representation
-    res = extract(catalog, QUERY)
+    # 1. declarative extraction, sharded + budgeted (DESIGN.md §7):
+    #    8 row shards, peak resident rows per shard enforced
+    res = extract_sharded(catalog, QUERY, n_shards=8,
+                          max_resident_rows=200_000)
     g = res.graph
     print(f"plan: {res.plans[0].describe()}   (** = postponed large join)")
     print(f"condensed: {g.n_edges_condensed} edges, {g.n_virtual} virtual nodes")
     print(f"expanded would be: {g.n_edges_expanded()} edges "
           f"({g.n_edges_expanded()/g.n_edges_condensed:.1f}x larger)")
+    print(f"sharded build: peak {res.budget.peak_resident_rows} resident "
+          f"rows/shard (cap 200000) over {res.budget.n_shards_processed} "
+          "shard tasks")
+    # the merge step is exact — same bytes as the one-shot build
+    assert graphs_identical(g, extract(catalog, QUERY).graph)
 
     # 2. representation choice (paper §6.5)
     rec = recommend(g, workload="multi_pass")
     print(f"advisor: host={rec.host_representation} device={rec.device_representation}")
     print(f"  ({rec.reason})")
 
-    # 3. deduplicate for duplicate-sensitive analytics (DEDUP-C)
-    corr = dedup.build_correction(g)
+    # 3. deduplicate for duplicate-sensitive analytics (DEDUP-C),
+    #    built with the streaming fold so the host never holds the
+    #    raw expansion (DESIGN.md §2)
+    corr = dedup.build_correction_streaming(g)
     dev = engine.to_device(g, correction=corr)
     print(f"correction: {len(corr[0])} duplicated pairs "
           f"(duplication ratio {g.duplication_ratio():.3f})")
 
-    # 4. run algorithms on the condensed graph
+    # 4. propagate on the condensed graph
     pr = algorithms.pagerank(dev, num_iters=30)
     deg = algorithms.out_degrees(dev)
     cc = algorithms.connected_components(engine.to_device(g))  # C-DUP direct!

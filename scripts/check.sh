@@ -10,7 +10,13 @@ python -m pytest -x -q -m "not tier2"
 echo "== tier-2 (property / statistical) =="
 python -m pytest -q -m tier2
 
+echo "== docs check (dead symbol references in README/DESIGN) =="
+python scripts/check_docs.py
+
 echo "== smoke benches (every section at toy sizes) =="
+# the extraction section asserts sharded-extraction byte-identity and
+# budget accounting (DESIGN.md §7) — an ExtractionBudget violation or a
+# merge-step mismatch fails this step
 python -m benchmarks.run --smoke
 
 echo "== kernels perf cells (BENCH_kernels.json) =="

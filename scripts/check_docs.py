@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs-rot gate: README.md / DESIGN.md must not reference dead symbols.
+
+Every backticked token in the two top-level docs that looks like a code
+identifier or a repo path is checked against the actual tree: paths must
+exist, identifiers must occur somewhere in the code corpus (src/, tests/,
+benchmarks/, examples/, scripts/).  A doc that names a function or file
+deleted by a refactor fails scripts/check.sh here instead of rotting
+silently — exactly the class of drift the PR-3/PR-4 refactors kept
+producing.
+
+Exit code 0 = clean; 1 = dead references (listed on stderr).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md"]
+CODE_DIRS = ["src", "tests", "benchmarks", "examples", "scripts"]
+CODE_EXT = {".py", ".sh", ".ini", ".json", ".md"}
+
+# Tokens that are prose, math, or shell notation rather than symbol
+# references; single letters and anything < 4 chars are skipped anyway.
+ALLOW = {
+    "pytest", "hypothesis", "numpy", "python", "jax", "pallas",
+    "vmem", "smem", "hbm", "mosaic", "vllm", "csv", "jit",
+}
+
+_TOKEN = re.compile(r"`([^`\n]+)`")
+_IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_.]*$")
+_PATHY = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+
+
+def _corpus() -> str:
+    chunks = []
+    for d in CODE_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(ROOT, d)):
+            for f in files:
+                if os.path.splitext(f)[1] in CODE_EXT:
+                    chunks.append(f)  # filenames count as symbols too
+                    path = os.path.join(dirpath, f)
+                    try:
+                        with open(path, encoding="utf-8") as fh:
+                            chunks.append(fh.read())
+                    except (OSError, UnicodeDecodeError):
+                        pass
+    chunks.extend(os.listdir(ROOT))
+    return "\n".join(chunks)
+
+
+def _path_exists(token: str) -> bool:
+    token = token.rstrip("/")
+    for base in ("", "src", os.path.join("src", "repro")):
+        if os.path.exists(os.path.join(ROOT, base, token)):
+            return True
+    return False
+
+
+def _check(token: str, corpus: str) -> bool:
+    """True when the token resolves to something real."""
+    token = token.strip().rstrip(")").removesuffix("(")
+    if token.endswith("()"):
+        token = token[:-2]
+    if len(token) < 4 or token.lower() in ALLOW:
+        return True
+    if not any(c.isalpha() for c in token):
+        return True
+    if " " in token or "\t" in token:
+        return True  # command lines / prose
+    if token.startswith("--"):
+        return token in corpus
+    if "/" in token or token.endswith((".py", ".md", ".sh", ".json", ".ini")):
+        if _path_exists(token) or _path_exists(token + ".py") or token in corpus:
+            return True
+        # module-path.attribute hybrid (`core/engine.propagate`): the
+        # module file must exist and the attribute must occur in the tree
+        if "." in token:
+            mod, _, attr = token.partition(".")
+            return _path_exists(mod + ".py") and attr in corpus
+        return False
+    if not (_IDENT.match(token) or _PATHY.match(token)):
+        return True  # math / shell fragments like x[idx]=v
+    if token in corpus:
+        return True
+    # dotted name: the module path or the final attribute must exist
+    if "." in token:
+        parts = token.split(".")
+        as_path = os.path.join(*parts)
+        if _path_exists(as_path + ".py") or _path_exists(as_path):
+            return True
+        return parts[-1] in corpus
+    return False
+
+
+def main() -> int:
+    corpus = _corpus()
+    dead = []
+    for doc in DOCS:
+        with open(os.path.join(ROOT, doc), encoding="utf-8") as fh:
+            text = fh.read()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for token in _TOKEN.findall(line):
+                if not _check(token, corpus):
+                    dead.append((doc, lineno, token))
+    if dead:
+        print("dead doc references (symbol/path not found in the tree):",
+              file=sys.stderr)
+        for doc, lineno, token in dead:
+            print(f"  {doc}:{lineno}: `{token}`", file=sys.stderr)
+        return 1
+    n_tokens = sum(
+        len(_TOKEN.findall(open(os.path.join(ROOT, d), encoding="utf-8").read()))
+        for d in DOCS
+    )
+    print(f"docs check: {n_tokens} backticked references in "
+          f"{'/'.join(DOCS)} all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

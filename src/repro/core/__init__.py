@@ -5,10 +5,17 @@ Public API:
     from repro.core import extract, parse, CondensedGraph
     from repro.core import engine, algorithms, dedup, advisor
 """
-from .condensed import BipartiteEdges, Chain, CondensedGraph, ExpandedGraph
+from .condensed import (
+    BipartiteEdges,
+    Chain,
+    CondensedGraph,
+    ExpandedGraph,
+    graphs_identical,
+)
 from .dsl import ExtractionQuery, ParseError, parse
-from .extract import ExtractionResult, extract, extract_query
-from .relational import Catalog, Table
+from .extract import ExtractionResult, extract, extract_query, extract_sharded
+from .planner import ExtractionBudget, ExtractionBudgetError
+from .relational import Catalog, ShardedTable, Table
 from .advisor import recommend
 from .serialize import export_edge_list, load_condensed, save_condensed
 
@@ -19,12 +26,17 @@ __all__ = [
     "ExpandedGraph",
     "ExtractionQuery",
     "ExtractionResult",
+    "ExtractionBudget",
+    "ExtractionBudgetError",
     "ParseError",
     "Catalog",
+    "ShardedTable",
     "Table",
     "parse",
     "extract",
     "extract_query",
+    "extract_sharded",
+    "graphs_identical",
     "recommend",
     "save_condensed",
     "load_condensed",

@@ -14,8 +14,9 @@ matrices.  All propagation in :mod:`repro.core.engine` exploits this
 factorization instead of materializing ``M``.
 
 Everything in this module is host-side NumPy — extraction and dedup are
-irregular/preprocessing work; the device-facing arrays are produced by
-``to_device_csr`` helpers consumed by the JAX engine.
+irregular/preprocessing work; the device-facing arrays are built by
+``repro.core.engine.to_device`` / ``to_device_packed`` from these
+containers.
 """
 from __future__ import annotations
 
@@ -34,6 +35,9 @@ __all__ = [
     "build_csr",
     "fold_path_pairs",
     "split_expansion_budget",
+    "merge_sorted_unique",
+    "merge_chain_shards",
+    "graphs_identical",
     "DEFAULT_CHUNK_ROWS",
 ]
 
@@ -98,7 +102,10 @@ class ExpansionAccounting:
 
 @dataclasses.dataclass
 class BipartiteEdges:
-    """Directed edges from one level to the next (COO)."""
+    """Directed edges from one level to the next (COO) — one incidence
+    factor of the condensed representation (paper §4.2 Step 5).  Ids are
+    validated against ``n_src``/``n_dst`` at construction so range bugs
+    surface here, not as silent gather corruption."""
 
     src: np.ndarray
     dst: np.ndarray
@@ -139,7 +146,8 @@ class BipartiteEdges:
 
 @dataclasses.dataclass
 class CSR:
-    """Compressed sparse row view of a BipartiteEdges (host-side)."""
+    """Compressed sparse row view of a BipartiteEdges (host-side): the
+    paper's adjacency-list layout (§5.1) for iterator-style traversal."""
 
     indptr: np.ndarray
     indices: np.ndarray
@@ -151,6 +159,7 @@ class CSR:
 
 
 def build_csr(edges: BipartiteEdges) -> CSR:
+    """COO -> CSR by stable counting sort (paper §5.1 layout)."""
     order = np.argsort(edges.src, kind="stable")
     indices = edges.dst[order]
     counts = np.bincount(edges.src, minlength=edges.n_src)
@@ -161,7 +170,8 @@ def build_csr(edges: BipartiteEdges) -> CSR:
 
 @dataclasses.dataclass
 class Chain:
-    """One Edges-statement's condensed path structure.
+    """One Edges-statement's condensed path structure (paper §4.2 Step 5:
+    one virtual-node layer per postponed large-output join).
 
     ``edges[0]`` goes real -> virtual-layer-1, ``edges[-1]`` goes
     virtual-layer-k -> real; middle entries connect consecutive virtual
@@ -433,12 +443,136 @@ def fold_path_pairs(
 
 
 # ---------------------------------------------------------------------------
+# Shard merging (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def merge_sorted_unique(parts: Sequence[np.ndarray]) -> np.ndarray:
+    """Sorted-key union of per-shard sorted-unique key arrays.
+
+    The associativity that makes sharded extraction exact: the union of
+    per-shard distinct values equals the distinct values of the union, and
+    sorting makes the result independent of the shard partition — so the
+    merged virtual-node id space is byte-identical to the unsharded one.
+    """
+    if not parts:
+        return np.empty(0, dtype=np.int64)
+    return np.unique(np.concatenate(list(parts)))
+
+
+def merge_chain_shards(
+    shard_chains: Sequence[Chain],
+    shard_layer_keys: Sequence[Sequence[np.ndarray]],
+) -> Tuple[Chain, List[np.ndarray]]:
+    """Merge per-shard condensed chains into one global :class:`Chain`
+    (paper §4.2 Step 5, partition-parallel form; DESIGN.md §7).
+
+    Each shard arrives with its own *local* virtual-node id spaces
+    (``shard_layer_keys[s][k]`` = sorted distinct values of postponed
+    attribute ``k`` seen by shard ``s``); real endpoints are already
+    global.  The merge:
+
+    1. unions every layer's key sets by sorted-key merge
+       (:func:`merge_sorted_unique`) — a plain offset concatenation would
+       duplicate virtual nodes whose key occurs in more than one shard,
+       which is why locals are *remapped*, not offset;
+    2. remaps each shard's local virtual ids through
+       ``searchsorted(merged_keys, local_keys)``;
+    3. concatenates each level's edges across shards in shard order.
+
+    Because ``remap[searchsorted(local, v)] == searchsorted(merged, v)``
+    for every value ``v`` a shard saw, and shard outputs are contiguous
+    slices of the unsharded segment output, the merged edge arrays are
+    byte-identical to the unsharded build's.
+    """
+    if not shard_chains:
+        raise ValueError("merge_chain_shards needs at least one shard")
+    n_levels = len(shard_chains[0].edges)
+    n_layers = n_levels - 1
+    for c, keys in zip(shard_chains, shard_layer_keys):
+        if len(c.edges) != n_levels or len(keys) != n_layers:
+            raise ValueError("shards disagree on chain layer structure")
+    merged_keys = [
+        merge_sorted_unique([keys[k] for keys in shard_layer_keys])
+        for k in range(n_layers)
+    ]
+    remaps = [
+        [np.searchsorted(merged_keys[k], keys[k]) for k in range(n_layers)]
+        for keys in shard_layer_keys
+    ]
+    levels: List[BipartiteEdges] = []
+    n_real_src = shard_chains[0].edges[0].n_src
+    n_real_dst = shard_chains[0].edges[-1].n_dst
+    for lvl in range(n_levels):
+        srcs: List[np.ndarray] = []
+        dsts: List[np.ndarray] = []
+        for s, chain in enumerate(shard_chains):
+            e = chain.edges[lvl]
+            src = e.src if lvl == 0 else remaps[s][lvl - 1][e.src]
+            dst = e.dst if lvl == n_levels - 1 else remaps[s][lvl][e.dst]
+            srcs.append(np.asarray(src, dtype=np.int64))
+            dsts.append(np.asarray(dst, dtype=np.int64))
+        n_src = n_real_src if lvl == 0 else merged_keys[lvl - 1].size
+        n_dst = n_real_dst if lvl == n_levels - 1 else merged_keys[lvl].size
+        levels.append(
+            BipartiteEdges(
+                np.concatenate(srcs), np.concatenate(dsts), n_src, int(n_dst)
+            )
+        )
+    return Chain(levels), merged_keys
+
+
+def _arrays_identical(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> bool:
+    if a is None or b is None:
+        return a is b
+    a, b = np.asarray(a), np.asarray(b)
+    return a.dtype == b.dtype and a.shape == b.shape and bool(np.array_equal(a, b))
+
+
+def _edges_identical(a: Optional[BipartiteEdges], b: Optional[BipartiteEdges]) -> bool:
+    if a is None or b is None:
+        return a is b
+    return (
+        a.n_src == b.n_src
+        and a.n_dst == b.n_dst
+        and _arrays_identical(a.src, b.src)
+        and _arrays_identical(a.dst, b.dst)
+    )
+
+
+def graphs_identical(a: "CondensedGraph", b: "CondensedGraph") -> bool:
+    """Byte-identity of two condensed graphs: every edge array (values,
+    order, dtype), layer size, direct edge set, node type, and node
+    property must match exactly.  This is the sharded-extraction merge
+    invariant (DESIGN.md §7) — far stricter than graph isomorphism or
+    equal expansions, and what the parity suite asserts.
+    """
+    if a.n_real != b.n_real or len(a.chains) != len(b.chains):
+        return False
+    for ca, cb in zip(a.chains, b.chains):
+        if len(ca.edges) != len(cb.edges):
+            return False
+        if not all(_edges_identical(ea, eb) for ea, eb in zip(ca.edges, cb.edges)):
+            return False
+    if not _edges_identical(a.direct, b.direct):
+        return False
+    if not _arrays_identical(a.node_type, b.node_type):
+        return False
+    if sorted(a.node_properties) != sorted(b.node_properties):
+        return False
+    return all(
+        _arrays_identical(v, b.node_properties[k])
+        for k, v in a.node_properties.items()
+    )
+
+
+# ---------------------------------------------------------------------------
 # Expanded graph
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class ExpandedGraph:
-    """The EXP representation: unique (src, dst) pairs + path multiplicity."""
+    """The EXP representation (paper §4.1 baseline): unique (src, dst)
+    pairs + path multiplicity."""
 
     src: np.ndarray
     dst: np.ndarray

@@ -316,10 +316,17 @@ def _upload_operands(bsb) -> PackedOperands:
     )
 
 
-def _pack_edges(e: BipartiteEdges, dev: DeviceBipartite) -> DevicePackedLayer:
+def _pack_edges(
+    e: BipartiteEdges,
+    dev: DeviceBipartite,
+    shard_edges: Optional[int] = None,
+) -> DevicePackedLayer:
     """``dev`` is the already-uploaded COO layer from :func:`to_device`,
     reused so the edge arrays cross to the device only once.  Packs both
-    directions: the forward incidence and its transpose (reverse steps)."""
+    directions: the forward incidence and its transpose (reverse steps).
+    ``shard_edges`` routes the packing through the shard-at-a-time path
+    (:func:`repro.kernels.pack.pack_bipartite` slices + OR-merge,
+    DESIGN.md §7) so packing transients stay bounded for large layers."""
     from ..kernels.pack import TILE, pack_bipartite
 
     fwd = rev = None
@@ -328,8 +335,10 @@ def _pack_edges(e: BipartiteEdges, dev: DeviceBipartite) -> DevicePackedLayer:
     n_src_pad = max(-(-e.n_src // TILE), 1) * TILE
     n_dst_pad = max(-(-e.n_dst // TILE), 1) * TILE
     try:
-        fwd = _upload_operands(pack_bipartite(e))
-        rev = _upload_operands(pack_bipartite(e.reversed()))
+        fwd = _upload_operands(pack_bipartite(e, shard_edges=shard_edges))
+        rev = _upload_operands(
+            pack_bipartite(e.reversed(), shard_edges=shard_edges)
+        )
     except ValueError:
         fwd = rev = None  # duplicate edges (multiplicity): COO path only
     return DevicePackedLayer(
@@ -351,12 +360,15 @@ def to_device_packed(
     drop_self_loops: bool = True,
     backend: str = "auto",
     feature_block: int = 128,
+    pack_shard_edges: Optional[int] = None,
 ) -> DevicePacked:
     """Like :func:`to_device`, additionally packing every condensed layer
     into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
     ring propagation runs on the Pallas kernel.  Correction / dedup
     semantics are identical to :func:`to_device` (streamed corrections
-    accepted the same way).
+    accepted the same way).  ``pack_shard_edges`` bounds the host packing
+    transients per layer (shard-at-a-time packing, DESIGN.md §7) — the
+    uploaded operands are byte-identical either way.
     """
     base = to_device(
         graph,
@@ -366,11 +378,14 @@ def to_device_packed(
     )
     assert isinstance(base, DeviceCondensed)
     chains = tuple(
-        tuple(_pack_edges(e, d) for e, d in zip(c.edges, dc))
+        tuple(
+            _pack_edges(e, d, pack_shard_edges)
+            for e, d in zip(c.edges, dc)
+        )
         for c, dc in zip(graph.chains, base.chains)
     )
     direct = (
-        _pack_edges(graph.direct, base.direct)
+        _pack_edges(graph.direct, base.direct, pack_shard_edges)
         if graph.direct is not None
         else None
     )

@@ -8,6 +8,14 @@ Steps (paper §4.2):
   5. assemble BipartiteEdges per segment into Chains (direct edges when a
      statement has no postponed join);
   6. optional preprocessing: expand cheap virtual nodes (Step 6).
+
+Sharded extraction (DESIGN.md §7): pass ``n_shards > 1`` (or any
+``ExtractionBudget``) and every step above runs partition-parallel —
+Nodes tables and segment leading atoms are split into contiguous row
+shards, each shard is executed with its transients charged against the
+budget, and a merge step (sorted-key :class:`NodeSpace` union, local ->
+global virtual-id remap, shard-order edge concatenation) reassembles a
+``CondensedGraph`` byte-identical to the unsharded build.
 """
 from __future__ import annotations
 
@@ -17,21 +25,58 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .condensed import BipartiteEdges, Chain, CondensedGraph
+from .condensed import (
+    BipartiteEdges,
+    Chain,
+    CondensedGraph,
+    merge_chain_shards,
+)
 from .dsl import ExtractionQuery, Rule, parse
-from .planner import ChainPlan, bind_atom, execute_segment, plan_rule
-from .relational import Catalog
+from .planner import (
+    ChainPlan,
+    ExtractionBudget,
+    _bind_table,
+    bind_atom,
+    execute_segment,
+    execute_segment_sharded,
+    plan_rule,
+)
+from .relational import Catalog, ShardedTable, Table
 
-__all__ = ["ExtractionResult", "extract", "extract_query"]
+__all__ = [
+    "ExtractionResult",
+    "NodeSpace",
+    "extract",
+    "extract_query",
+    "extract_sharded",
+]
 
 
 @dataclasses.dataclass
 class NodeSpace:
-    """Raw node keys <-> dense ids, with per-type bookkeeping."""
+    """Raw node keys <-> dense ids, with per-type bookkeeping (paper §4.2
+    Step 1: the real-node id space every chain endpoint indexes into).
 
-    keys: np.ndarray          # raw key per dense id
+    ``keys`` must be sorted strictly ascending (i.e. sorted and
+    duplicate-free): :meth:`lookup` is a ``searchsorted``, and the sharded
+    merge step unions per-shard key sets under the same invariant — so it
+    is asserted at construction (the ``BipartiteEdges`` convention) rather
+    than surfacing later as silently wrong lookups.
+    """
+
+    keys: np.ndarray          # raw key per dense id, sorted ascending
     type_ids: np.ndarray      # node-type index per dense id
     type_names: List[str]
+
+    def __post_init__(self) -> None:
+        self.keys = np.asarray(self.keys)
+        if self.keys.ndim != 1:
+            raise ValueError(f"keys must be 1-D, got shape {self.keys.shape}")
+        if self.keys.size > 1 and not bool(np.all(self.keys[:-1] < self.keys[1:])):
+            raise ValueError(
+                "NodeSpace keys must be sorted strictly ascending "
+                "(searchsorted lookups and shard merges rely on it)"
+            )
 
     @property
     def n(self) -> int:
@@ -55,15 +100,22 @@ class NodeSpace:
 
 @dataclasses.dataclass
 class ExtractionResult:
+    """Everything one extraction produced (paper §4.2 output bundle):
+    the condensed graph, the node id space, the per-rule plans, and —
+    when the sharded pipeline ran — the shard count and the threaded
+    :class:`~repro.core.planner.ExtractionBudget` accounting."""
+
     graph: CondensedGraph
     nodes: NodeSpace
     plans: List[ChainPlan]
     seconds: float
     dropped_endpoints: int
     mode: str
+    n_shards: int = 1
+    budget: Optional[ExtractionBudget] = None
 
     def summary(self) -> Dict[str, object]:
-        return {
+        out = {
             "n_real": self.graph.n_real,
             "n_virtual": self.graph.n_virtual,
             "edges_condensed": self.graph.n_edges_condensed,
@@ -71,20 +123,38 @@ class ExtractionResult:
             "mode": self.mode,
             "plans": [p.describe() for p in self.plans],
         }
+        if self.n_shards != 1 or self.budget is not None:
+            out["n_shards"] = self.n_shards
+        if self.budget is not None:
+            out["budget"] = self.budget.summary()
+        return out
+
+
+def _node_rule_parts(
+    catalog: Catalog, rules: Sequence[Rule]
+) -> List[Tuple[Rule, Table, str, int]]:
+    """Bind every Nodes rule once; returns (rule, bound table, id var,
+    type index) in rule order (paper §4.2 Step 1)."""
+    parts = []
+    for i, rule in enumerate(rules):
+        if len(rule.atoms) != 1:
+            raise ValueError("Nodes statements bind one relation each")
+        t = bind_atom(catalog, rule.atoms[0], rule.comparisons)
+        parts.append((rule, t, rule.head_vars[0], i))
+    return parts
 
 
 def _build_node_space(
     catalog: Catalog, rules: Sequence[Rule]
 ) -> Tuple[NodeSpace, Dict[str, np.ndarray]]:
+    """One-shot node-space build (paper §4.2 Step 1): concatenate every
+    Nodes rule's keys, dedup with first-occurrence wins for the type id.
+    The sharded equivalent is :func:`_build_node_space_sharded`."""
     key_parts: List[np.ndarray] = []
     type_parts: List[np.ndarray] = []
     prop_parts: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
     type_names: List[str] = []
-    for rule in rules:
-        if len(rule.atoms) != 1:
-            raise ValueError("Nodes statements bind one relation each")
-        t = bind_atom(catalog, rule.atoms[0], rule.comparisons)
-        id_var = rule.head_vars[0]
+    for rule, t, id_var, _ in _node_rule_parts(catalog, rules):
         keys = t.column(id_var)
         type_names.append(rule.atoms[0].relation)
         key_parts.append(keys)
@@ -95,6 +165,16 @@ def _build_node_space(
     all_types = np.concatenate(type_parts)
     uniq, first = np.unique(all_keys, return_index=True)
     space = NodeSpace(keys=uniq, type_ids=all_types[first], type_names=type_names)
+    props = _scatter_props(space, prop_parts)
+    return space, props
+
+
+def _scatter_props(
+    space: NodeSpace,
+    prop_parts: Dict[str, List[Tuple[np.ndarray, np.ndarray]]],
+) -> Dict[str, np.ndarray]:
+    """Scatter per-rule property columns into the dense node space, in
+    part order (later parts overwrite, matching the one-shot build)."""
     props: Dict[str, np.ndarray] = {}
     for name, parts in prop_parts.items():
         out = np.zeros(space.n, dtype=parts[0][1].dtype)
@@ -102,7 +182,120 @@ def _build_node_space(
             idx, found = space.lookup(keys)
             out[idx[found]] = vals[found]
         props[name] = out
+    return props
+
+
+def _build_node_space_sharded(
+    catalog: Catalog,
+    rules: Sequence[Rule],
+    n_shards: int,
+    budget: Optional[ExtractionBudget],
+) -> Tuple[NodeSpace, Dict[str, np.ndarray]]:
+    """Shard-wise node-space build, byte-identical to
+    :func:`_build_node_space` (DESIGN.md §7).
+
+    Each Nodes rule's *base relation* is row-sharded and bound
+    block-at-a-time (binding is row-local, so concatenated bound blocks
+    equal the one-shot bound table row-for-row); every shard contributes
+    its sorted unique keys tagged with the *global* bound-row index of
+    their first occurrence.  The merge sorts candidates by that index and
+    dedups, so the "first Nodes row wins" type assignment of the one-shot
+    build is preserved exactly, while no single step ever holds more than
+    one shard's scan block plus the (deduplicated) candidate set.
+    """
+    cand_keys: List[np.ndarray] = []
+    cand_types: List[np.ndarray] = []
+    cand_gidx: List[np.ndarray] = []
+    prop_parts: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+    type_names: List[str] = []
+    offset = 0
+    for tindex, rule in enumerate(rules):
+        if len(rule.atoms) != 1:
+            raise ValueError("Nodes statements bind one relation each")
+        id_var = rule.head_vars[0]
+        type_names.append(rule.atoms[0].relation)
+        sharded = ShardedTable(
+            catalog.table(rule.atoms[0].relation), n_shards, mode="rows"
+        )
+        for s in range(n_shards):
+            if budget is not None:
+                budget.begin_shard()
+            block = sharded.shard(s)
+            if budget is not None:
+                budget.charge(len(block), "node-space base block")
+            st = _bind_table(block, rule.atoms[0], rule.comparisons)
+            if budget is not None:
+                budget.charge(len(st), "bound node block")
+                budget.release(len(block))
+            keys = st.column(id_var)
+            uk, first = np.unique(keys, return_index=True)
+            cand_keys.append(uk)
+            cand_types.append(np.full(uk.size, tindex, dtype=np.int32))
+            cand_gidx.append(first.astype(np.int64) + offset)
+            for prop in rule.head_vars[1:]:
+                prop_parts.setdefault(prop, []).append((keys, st.column(prop)))
+            offset += len(st)
+            if budget is not None:
+                budget.release(len(st))
+                budget.end_shard()
+    all_keys = np.concatenate(cand_keys)
+    all_types = np.concatenate(cand_types)
+    all_gidx = np.concatenate(cand_gidx)
+    # sorted-key union with first-global-occurrence wins: ordering the
+    # candidates by global row index makes np.unique's first-occurrence
+    # index pick exactly the row the one-shot build would have picked
+    order = np.argsort(all_gidx, kind="stable")
+    uniq, first = np.unique(all_keys[order], return_index=True)
+    space = NodeSpace(
+        keys=uniq, type_ids=all_types[order][first], type_names=type_names
+    )
+    props = _scatter_props(space, prop_parts)
     return space, props
+
+
+def _assemble_rule(
+    nodes: NodeSpace,
+    seg_results: Sequence[Tuple[np.ndarray, np.ndarray]],
+    layer_keys: Sequence[np.ndarray],
+) -> Tuple[Chain, int]:
+    """Paper §4.2 Steps 4–5 for one Edges rule with postponed joins: map
+    segment endpoint values into the real node space / the given virtual
+    layer key spaces and wrap the per-segment ``BipartiteEdges`` in a
+    :class:`Chain`.  ``layer_keys`` may be shard-local (the sharded path
+    remaps to global ids in the merge step) or global (one-shot path).
+    Returns the chain and the count of dropped real endpoints."""
+    dropped = 0
+    edges: List[BipartiteEdges] = []
+    for k, (sv, dv) in enumerate(seg_results):
+        if k == 0:
+            sid, sok = nodes.lookup(sv)
+            n_src = nodes.n
+        else:
+            sid = np.searchsorted(layer_keys[k - 1], sv)
+            sok = np.ones(sid.size, dtype=bool)
+            n_src = layer_keys[k - 1].size
+        if k == len(seg_results) - 1:
+            did, dok = nodes.lookup(dv)
+            n_dst = nodes.n
+        else:
+            did = np.searchsorted(layer_keys[k], dv)
+            dok = np.ones(did.size, dtype=bool)
+            n_dst = layer_keys[k].size
+        ok = sok & dok
+        dropped += int((~ok).sum())
+        edges.append(BipartiteEdges(sid[ok], did[ok], n_src, n_dst))
+    return Chain(edges), dropped
+
+
+def _local_layer_keys(
+    seg_results: Sequence[Tuple[np.ndarray, np.ndarray]], n_layers: int
+) -> List[np.ndarray]:
+    """Virtual-node key space per postponed attribute (paper §4.2 Step 4):
+    the distinct values observed on both sides of each segment boundary."""
+    return [
+        np.unique(np.concatenate([seg_results[k][1], seg_results[k + 1][0]]))
+        for k in range(n_layers)
+    ]
 
 
 def extract_query(
@@ -110,7 +303,23 @@ def extract_query(
     query: ExtractionQuery,
     mode: str = "auto",
     preprocess: bool = False,
+    n_shards: int = 1,
+    budget: Optional[ExtractionBudget] = None,
 ) -> ExtractionResult:
+    """Plan + execute a parsed extraction query (paper §4.2 Steps 1–6).
+
+    ``mode`` selects join postponement (see :func:`repro.core.planner.
+    plan_rule`); ``preprocess`` applies the paper's Step-6 cheap-virtual-
+    node expansion.  With ``n_shards > 1`` — or any ``budget``, which
+    forces the instrumented pipeline even for one shard — extraction runs
+    sharded (DESIGN.md §7): per-table row partitions, per-shard segment
+    execution under budget accounting, and a merge step that reassembles
+    a ``CondensedGraph`` byte-identical to the unsharded build.
+    """
+    if n_shards != 1 or budget is not None:
+        return _extract_query_sharded(
+            catalog, query, mode, preprocess, max(n_shards, 1), budget
+        )
     t0 = time.perf_counter()
     nodes, props = _build_node_space(catalog, query.nodes_rules)
 
@@ -143,42 +352,12 @@ def extract_query(
             direct_s.append(sid[ok])
             direct_d.append(did[ok])
             continue
-        # Virtual layer id spaces: distinct values per postponed attribute.
-        layer_keys: List[np.ndarray] = []
-        for k in range(len(large_vars)):
-            vals = np.concatenate([seg_results[k][1], seg_results[k + 1][0]])
-            layer_keys.append(np.unique(vals))
-        edges: List[BipartiteEdges] = []
-        for k, (sv, dv) in enumerate(seg_results):
-            if k == 0:
-                sid, sok = nodes.lookup(sv)
-                n_src = nodes.n
-            else:
-                sid = np.searchsorted(layer_keys[k - 1], sv)
-                sok = np.ones(sid.size, dtype=bool)
-                n_src = layer_keys[k - 1].size
-            if k == len(seg_results) - 1:
-                did, dok = nodes.lookup(dv)
-                n_dst = nodes.n
-            else:
-                did = np.searchsorted(layer_keys[k], dv)
-                dok = np.ones(did.size, dtype=bool)
-                n_dst = layer_keys[k].size
-            ok = sok & dok
-            dropped += int((~ok).sum())
-            edges.append(BipartiteEdges(sid[ok], did[ok], n_src, n_dst))
-        chains.append(Chain(edges))
+        layer_keys = _local_layer_keys(seg_results, len(large_vars))
+        chain, d = _assemble_rule(nodes, seg_results, layer_keys)
+        dropped += d
+        chains.append(chain)
 
-    direct = None
-    if direct_s:
-        ds, dd = np.concatenate(direct_s), np.concatenate(direct_d)
-        if ds.size:
-            direct = BipartiteEdges(ds, dd, nodes.n, nodes.n)
-    graph = CondensedGraph(
-        nodes.n, chains, direct, node_properties=props, node_type=nodes.type_ids
-    )
-    if preprocess:
-        graph = graph.preprocess()
+    graph = _finish_graph(nodes, props, chains, direct_s, direct_d, preprocess)
     return ExtractionResult(
         graph=graph,
         nodes=nodes,
@@ -189,11 +368,143 @@ def extract_query(
     )
 
 
+def _finish_graph(
+    nodes: NodeSpace,
+    props: Dict[str, np.ndarray],
+    chains: List[Chain],
+    direct_s: List[np.ndarray],
+    direct_d: List[np.ndarray],
+    preprocess: bool,
+) -> CondensedGraph:
+    """Shared tail of both pipelines: concatenate direct edges, build the
+    ``CondensedGraph``, optionally run paper §4.2 Step-6 preprocessing."""
+    direct = None
+    if direct_s:
+        ds, dd = np.concatenate(direct_s), np.concatenate(direct_d)
+        if ds.size:
+            direct = BipartiteEdges(ds, dd, nodes.n, nodes.n)
+    graph = CondensedGraph(
+        nodes.n, chains, direct, node_properties=props, node_type=nodes.type_ids
+    )
+    if preprocess:
+        graph = graph.preprocess()
+    return graph
+
+
+def _extract_query_sharded(
+    catalog: Catalog,
+    query: ExtractionQuery,
+    mode: str,
+    preprocess: bool,
+    n_shards: int,
+    budget: Optional[ExtractionBudget],
+) -> ExtractionResult:
+    """The sharded pipeline behind :func:`extract_query` (DESIGN.md §7).
+
+    Identical structure to the one-shot path, except that every data-
+    touching step runs per row shard: the node space is built shard-wise
+    and merged by sorted key, each segment executes per shard via
+    :func:`repro.core.planner.execute_segment_sharded`, each shard
+    assembles a shard-local :class:`Chain` over its own virtual key
+    spaces, and :func:`repro.core.condensed.merge_chain_shards` remaps
+    those to the global sorted key union — producing edge arrays equal
+    element-for-element to the unsharded build's.
+    """
+    t0 = time.perf_counter()
+    nodes, props = _build_node_space_sharded(
+        catalog, query.nodes_rules, n_shards, budget
+    )
+
+    chains: List[Chain] = []
+    direct_s: List[np.ndarray] = []
+    direct_d: List[np.ndarray] = []
+    plans: List[ChainPlan] = []
+    dropped = 0
+
+    for rule in query.edges_rules:
+        plan = plan_rule(catalog, rule, mode=mode)
+        plans.append(plan)
+        id1, id2 = plan.endpoint_vars
+        large_vars = [v for v, l in zip(plan.link_vars, plan.large) if l]
+        seg_vars = [id1] + large_vars + [id2]
+        # per segment: one (in_values, out_values) pair per shard
+        seg_shard: List[List[Tuple[np.ndarray, np.ndarray]]] = [
+            execute_segment_sharded(
+                catalog, plan, seg, seg_vars[k], seg_vars[k + 1],
+                n_shards, budget,
+            )
+            for k, seg in enumerate(plan.segments)
+        ]
+        if len(plan.segments) == 1:
+            # direct edges: per-shard lookups, concatenated in shard order
+            for s in range(n_shards):
+                sv, dv = seg_shard[0][s]
+                sid, sok = nodes.lookup(sv)
+                did, dok = nodes.lookup(dv)
+                ok = sok & dok
+                dropped += int((~ok).sum())
+                direct_s.append(sid[ok])
+                direct_d.append(did[ok])
+            continue
+        shard_chains: List[Chain] = []
+        shard_keys: List[List[np.ndarray]] = []
+        for s in range(n_shards):
+            seg_results = [seg_shard[k][s] for k in range(len(plan.segments))]
+            local_keys = _local_layer_keys(seg_results, len(large_vars))
+            chain_s, d = _assemble_rule(nodes, seg_results, local_keys)
+            dropped += d
+            shard_chains.append(chain_s)
+            shard_keys.append(local_keys)
+        merged, _ = merge_chain_shards(shard_chains, shard_keys)
+        chains.append(merged)
+
+    graph = _finish_graph(nodes, props, chains, direct_s, direct_d, preprocess)
+    return ExtractionResult(
+        graph=graph,
+        nodes=nodes,
+        plans=plans,
+        seconds=time.perf_counter() - t0,
+        dropped_endpoints=dropped,
+        mode=mode,
+        n_shards=n_shards,
+        budget=budget,
+    )
+
+
 def extract(
     catalog: Catalog,
     dsl_text: str,
     mode: str = "auto",
     preprocess: bool = False,
+    n_shards: int = 1,
+    budget: Optional[ExtractionBudget] = None,
 ) -> ExtractionResult:
-    """Parse + plan + execute a DSL program against a catalog."""
-    return extract_query(catalog, parse(dsl_text), mode=mode, preprocess=preprocess)
+    """Parse + plan + execute a DSL program against a catalog (paper §4.2;
+    the Fig-1 entry point).  ``n_shards`` / ``budget`` select the sharded
+    out-of-core pipeline (DESIGN.md §7)."""
+    return extract_query(
+        catalog, parse(dsl_text), mode=mode, preprocess=preprocess,
+        n_shards=n_shards, budget=budget,
+    )
+
+
+def extract_sharded(
+    catalog: Catalog,
+    dsl_text: str,
+    n_shards: int,
+    max_resident_rows: Optional[int] = None,
+    mode: str = "auto",
+    preprocess: bool = False,
+) -> ExtractionResult:
+    """Convenience front-end for larger-than-memory extraction
+    (DESIGN.md §7): shard the pipeline ``n_shards`` ways and enforce
+    ``max_resident_rows`` per shard (violations raise
+    :class:`~repro.core.planner.ExtractionBudgetError`).  The result's
+    ``budget`` field carries the accounting; the graph is byte-identical
+    to ``extract(catalog, dsl_text)``'s.
+    """
+    budget = ExtractionBudget(max_resident_rows=max_resident_rows)
+    return extract(
+        catalog, dsl_text, mode=mode, preprocess=preprocess,
+        n_shards=n_shards, budget=budget,
+    )

@@ -24,11 +24,100 @@ import numpy as np
 from .dsl import Atom, Comparison, Rule
 from .relational import Catalog, Table, hash_join
 
-__all__ = ["ChainPlan", "plan_rule", "bind_atom", "execute_segment"]
+__all__ = [
+    "ChainPlan",
+    "plan_rule",
+    "bind_atom",
+    "execute_segment",
+    "execute_segment_sharded",
+    "ExtractionBudget",
+    "ExtractionBudgetError",
+]
+
+
+class ExtractionBudgetError(RuntimeError):
+    """Raised when a shard's resident working set exceeds the budget.
+
+    The sharded pipeline never silently spills: a violated budget aborts
+    extraction so the caller can re-shard (more shards = smaller blocks)
+    instead of quietly blowing host memory (DESIGN.md §7).
+    """
+
+
+@dataclasses.dataclass
+class ExtractionBudget:
+    """Peak-resident-rows accounting for sharded extraction (DESIGN.md §7).
+
+    The sharded-extraction analog of ``ExpansionAccounting``
+    (:mod:`repro.core.condensed`): one instance is threaded through the
+    node-space build and every per-shard segment execution, charging each
+    transient host array (bound atom blocks, filtered probe sides, join
+    outputs) while it is resident.  ``peak_resident_rows`` is therefore an
+    upper bound on the rows any single shard holds at once — the quantity
+    that must stay bounded for larger-than-memory extraction.  Per-shard
+    *outputs* (the edge/key arrays that become the condensed graph) are
+    released when the shard ends: they are streamed into the assembly
+    buffers, whose total size is the condensed graph itself, not a
+    per-shard transient.
+
+    ``max_resident_rows=None`` means account-only (no limit); otherwise
+    any charge that pushes ``resident_rows`` past the limit raises
+    :class:`ExtractionBudgetError` immediately — violations raise, they do
+    not spill.
+    """
+
+    max_resident_rows: Optional[int] = None
+    resident_rows: int = 0           # live: rows currently charged
+    peak_resident_rows: int = 0      # max resident_rows ever observed
+    n_shards_processed: int = 0
+    n_segments_executed: int = 0
+    n_rows_joined: int = 0           # total join-output rows across shards
+    shard_peaks: List[int] = dataclasses.field(default_factory=list)
+    _shard_peak: int = 0
+
+    def charge(self, n_rows: int, what: str = "rows") -> None:
+        self.resident_rows += int(n_rows)
+        if self.resident_rows > self.peak_resident_rows:
+            self.peak_resident_rows = self.resident_rows
+        if self.resident_rows > self._shard_peak:
+            self._shard_peak = self.resident_rows
+        if (
+            self.max_resident_rows is not None
+            and self.resident_rows > self.max_resident_rows
+        ):
+            raise ExtractionBudgetError(
+                f"extraction budget exceeded: {self.resident_rows} resident "
+                f"rows ({what}) > max_resident_rows={self.max_resident_rows}; "
+                "increase the budget or extract with more shards"
+            )
+
+    def release(self, n_rows: int) -> None:
+        self.resident_rows -= int(n_rows)
+
+    def begin_shard(self) -> None:
+        self._shard_peak = self.resident_rows
+
+    def end_shard(self) -> None:
+        self.n_shards_processed += 1
+        self.shard_peaks.append(self._shard_peak)
+        self._shard_peak = self.resident_rows
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "max_resident_rows": self.max_resident_rows,
+            "peak_resident_rows": self.peak_resident_rows,
+            "n_shards_processed": self.n_shards_processed,
+            "n_segments_executed": self.n_segments_executed,
+            "n_rows_joined": self.n_rows_joined,
+        }
 
 
 @dataclasses.dataclass
 class ChainPlan:
+    """One Edges rule's executable plan (paper §3.3/§4.2 Step 2): the
+    chain-ordered atoms, the per-link large-output decisions, and the
+    eager segments between postponed joins."""
+
     rule: Rule
     atoms: List[Atom]            # chain order
     link_vars: List[str]         # join variable between consecutive atoms
@@ -96,8 +185,20 @@ def _chain_order(rule: Rule) -> Tuple[List[Atom], List[str]]:
 
 
 def bind_atom(catalog: Catalog, atom: Atom, comparisons: Sequence[Comparison]) -> Table:
-    """Materialize an atom: positional column->variable binding + selections."""
-    table = catalog.table(atom.relation)
+    """Materialize an atom (paper §4.2 Step 1/3): positional column ->
+    variable binding, constant/equality selections, and the rule's
+    comparison predicates pushed down to the base relation scan."""
+    return _bind_table(catalog.table(atom.relation), atom, comparisons)
+
+
+def _bind_table(
+    table: Table, atom: Atom, comparisons: Sequence[Comparison]
+) -> Table:
+    """:func:`bind_atom` against an explicit table — every binding step
+    (constant/equality masks, comparison pushdown) is row-local, so
+    binding a row slice equals slicing the bound table: the property the
+    sharded pipeline uses to bind base relations block-at-a-time
+    (DESIGN.md §7)."""
     cols = table.column_names
     if len(atom.args) != len(cols):
         raise ValueError(
@@ -123,6 +224,13 @@ def bind_atom(catalog: Catalog, atom: Atom, comparisons: Sequence[Comparison]) -
 
 
 def plan_rule(catalog: Catalog, rule: Rule, mode: str = "auto") -> ChainPlan:
+    """Plan one Edges rule (paper §3.3 chain ordering + §4.2 Step 2
+    large-output marking): order the body atoms into an ID1 ~> ID2 chain,
+    estimate each link's join output from catalog ``n_distinct`` stats,
+    and split the chain into eager segments at postponed joins.  ``mode``:
+    ``'auto'`` (stats decide, the paper's ``|R||S|/d > 2(|R|+|S|)`` rule),
+    ``'condensed'`` (postpone every join, Fig 5a), ``'expanded'``
+    (postpone none — EXP extraction)."""
     if rule.kind != "edges":
         raise ValueError("plan_rule plans Edges rules")
     atoms, links = _chain_order(rule)
@@ -170,8 +278,10 @@ def execute_segment(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Run one small-output segment eagerly; returns (in_values, out_values).
 
-    This is the part the paper "hands to the database": a sequence of
-    small-output hash joins, projected down to the segment endpoints.
+    This is the part the paper "hands to the database" (§4.2 Step 3): a
+    sequence of small-output hash joins, projected down to the segment
+    endpoints.  The whole segment is materialized on one host; for the
+    partition-parallel variant see :func:`execute_segment_sharded`.
     """
     i, j = seg
     acc = bind_atom(catalog, plan.atoms[i], plan.rule.comparisons)
@@ -184,3 +294,125 @@ def execute_segment(
             f"has {acc.column_names}"
         )
     return acc.column(in_var), acc.column(out_var)
+
+
+def _probe_partition(
+    table: Table,
+    atom: Atom,
+    comparisons: Sequence[Comparison],
+    key_var: str,
+    shard_keys: np.ndarray,
+    n_blocks: int,
+    budget: Optional[ExtractionBudget],
+) -> Table:
+    """Bind + filter the probe side of one shard's join, block by block.
+
+    A columnar semi-join: keep only probe rows whose join key occurs in
+    the shard's build-side keys (sorted-membership test, the bucket-probe
+    half of a hash-partitioned join).  Dropping non-matching rows cannot
+    change the join output, and — because binding is row-local and the
+    surviving rows keep their relative order — it cannot change the
+    output *order* either, which is what the byte-identical merge step
+    relies on (DESIGN.md §7).
+
+    The base relation is scanned in ``n_blocks`` row blocks, each bound
+    and filtered before the next is touched, so the charged residency is
+    one scan block plus the accumulated survivors — never a full bound
+    copy of the probe table (the budget's whole point).
+    """
+    from .relational import shard_bounds
+
+    parts: List[Dict[str, np.ndarray]] = []
+    for lo, hi in shard_bounds(len(table), n_blocks):
+        block = table.row_slice(lo, hi)
+        if budget is not None:
+            budget.charge(len(block), "probe scan block")
+        bound = _bind_table(block, atom, comparisons)
+        mask = np.isin(bound.column(key_var), shard_keys)
+        part = {k: v[mask] for k, v in bound.columns.items()}
+        if budget is not None:
+            budget.charge(int(mask.sum()), "filtered probe rows")
+            budget.release(len(block))
+        parts.append(part)
+    return Table(
+        atom.relation,
+        {k: np.concatenate([p[k] for p in parts]) for k in parts[0]},
+    )
+
+
+def execute_segment_sharded(
+    catalog: Catalog,
+    plan: ChainPlan,
+    seg: Tuple[int, int],
+    in_var: str,
+    out_var: str,
+    n_shards: int,
+    budget: Optional[ExtractionBudget] = None,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Partition-parallel :func:`execute_segment` (DESIGN.md §7).
+
+    The segment's leading *base relation* is split into ``n_shards``
+    contiguous row blocks (:class:`repro.core.relational.ShardedTable`,
+    ``mode='rows'``) and bound block-at-a-time (binding is row-local, see
+    :func:`_bind_table`); each shard joins its bound block through the
+    remaining atoms, with every probe side scanned in blocks and cut down
+    to the shard's live join keys by :func:`_probe_partition`.  Returns
+    one ``(in_values, out_values)`` pair per shard — empty shards return
+    empty arrays, and concatenating the shard results in order reproduces
+    the unsharded :func:`execute_segment` output element-for-element
+    (``hash_join`` enumerates build rows in order, so a contiguous build
+    block yields the corresponding contiguous output slice).
+
+    ``budget`` charges *everything* a shard makes resident — base-scan
+    blocks, bound blocks, filtered probe survivors, join outputs — so
+    ``peak_resident_rows`` is an honest bound on per-shard extraction
+    transients (the catalog's own columns are the database substrate and
+    are not charged; no full bound copy of any table is ever created on
+    this path).
+    """
+    from .relational import ShardedTable
+
+    i, j = seg
+    sharded = ShardedTable(
+        catalog.table(plan.atoms[i].relation), n_shards, mode="rows"
+    )
+    probe_tables = [
+        catalog.table(plan.atoms[k].relation) for k in range(i + 1, j + 1)
+    ]
+    results: List[Tuple[np.ndarray, np.ndarray]] = []
+    for s in range(n_shards):
+        if budget is not None:
+            budget.begin_shard()
+        block = sharded.shard(s)
+        if budget is not None:
+            budget.charge(len(block), "leading base block")
+        acc = _bind_table(block, plan.atoms[i], plan.rule.comparisons)
+        if budget is not None:
+            budget.charge(len(acc), "bound leading block")
+            budget.release(len(block))
+        for k, ptab in enumerate(probe_tables):
+            link = plan.link_vars[i + k]
+            probe = _probe_partition(
+                ptab, plan.atoms[i + 1 + k], plan.rule.comparisons,
+                link, acc.column(link), n_shards, budget,
+            )
+            joined = hash_join(acc, probe, link, link)
+            if budget is not None:
+                budget.charge(len(joined), "join output")
+                budget.n_rows_joined += len(joined)
+                budget.release(len(acc) + len(probe))
+            acc = joined
+        if in_var not in acc.column_names or out_var not in acc.column_names:
+            raise ValueError(
+                f"segment {seg} missing endpoint vars {in_var}/{out_var}; "
+                f"has {acc.column_names}"
+            )
+        results.append((acc.column(in_var), acc.column(out_var)))
+        if budget is not None:
+            # the shard's output is streamed into the assembly buffers
+            # (they become the condensed graph itself) — release it from
+            # the per-shard transient account
+            budget.release(len(acc))
+            budget.n_segments_executed += 1
+            budget.end_shard()
+    return results

@@ -5,6 +5,12 @@ per (seed, shard) so every data-parallel host draws disjoint streams —
 the multi-host contract real pipelines must satisfy.  Batches are placed
 with ``jax.device_put`` against the batch sharding so the train step
 never sees host arrays.
+
+:func:`sharded_extract_to_device` is the graph-side counterpart
+(DESIGN.md §7): relational catalog -> budgeted sharded extraction ->
+device graph, with the per-layer bitmap packing also done
+shard-at-a-time so no stage of the host pipeline materializes an
+unbounded transient.
 """
 from __future__ import annotations
 
@@ -15,7 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["TokenPipeline", "sasrec_batches", "gnn_batch"]
+__all__ = [
+    "TokenPipeline",
+    "sasrec_batches",
+    "gnn_batch",
+    "sharded_extract_to_device",
+]
 
 
 @dataclasses.dataclass
@@ -69,3 +80,45 @@ def sasrec_batches(
 
 def gnn_batch(graph, target: np.ndarray) -> Dict:
     return {"graph": graph, "target": jnp.asarray(target)}
+
+
+def sharded_extract_to_device(
+    catalog,
+    dsl_text: str,
+    n_shards: int,
+    max_resident_rows: Optional[int] = None,
+    mode: str = "auto",
+    packed: bool = False,
+    pack_shard_edges: Optional[int] = None,
+    correction_budget_triples: Optional[int] = None,
+):
+    """Catalog -> budgeted sharded extraction -> device graph, end to end.
+
+    The larger-than-memory serving pipeline (DESIGN.md §7): extraction
+    runs in ``n_shards`` row partitions with per-shard transients capped
+    at ``max_resident_rows`` (violations raise — see
+    :class:`repro.core.planner.ExtractionBudget`), the DEDUP-C correction
+    is built with the streaming fold (optionally under
+    ``correction_budget_triples``), and — when ``packed`` — each layer's
+    bitmap operands are packed shard-at-a-time (``pack_shard_edges``
+    edges per slice) before upload.  Returns ``(extraction_result,
+    device_graph)``; the device graph is duplicate-exact (DEDUP-C) and
+    identical to the one the unsharded pipeline would build.
+    """
+    from repro.core import dedup, engine
+    from repro.core.extract import extract_sharded
+
+    res = extract_sharded(
+        catalog, dsl_text, n_shards=n_shards,
+        max_resident_rows=max_resident_rows, mode=mode,
+    )
+    corr = dedup.build_correction_streaming(
+        res.graph, budget_triples=correction_budget_triples
+    )
+    if packed:
+        dev = engine.to_device_packed(
+            res.graph, correction=corr, pack_shard_edges=pack_shard_edges
+        )
+    else:
+        dev = engine.to_device(res.graph, correction=corr)
+    return res, dev

@@ -31,6 +31,7 @@ __all__ = [
     "current_mesh",
     "GRAPH_RULES",
     "shard_frontier",
+    "extraction_shard_range",
 ]
 
 # Logical-axis rules for the condensed-graph engine (DESIGN.md §3/§5):
@@ -146,6 +147,36 @@ def shard_frontier(x: jax.Array) -> jax.Array:
     if x.ndim == 2:
         return shard(x, "graph_nodes", "graph_batch")
     raise ValueError(f"frontier must be (n,) or (n, B); got rank {x.ndim}")
+
+
+def extraction_shard_range(
+    n_shards: int,
+    process_index: Optional[int] = None,
+    process_count: Optional[int] = None,
+) -> range:
+    """The contiguous extraction-shard ids this host owns (DESIGN.md §7).
+
+    The sharded extraction pipeline (``repro.core.extract``,
+    ``n_shards=...``) is embarrassingly parallel across shards until the
+    merge step; this maps the global shard space onto JAX processes so
+    each host runs ``extract``'s per-shard work for its own slice
+    (trailing hosts get one fewer shard when ``n_shards % process_count
+    != 0``).  Single-process (the CPU test container): the full range.
+    ``process_index``/``process_count`` default to
+    ``jax.process_index()``/``jax.process_count()``.
+    """
+    if process_index is None:
+        process_index = jax.process_index()
+    if process_count is None:
+        process_count = jax.process_count()
+    if not 0 <= process_index < process_count:
+        raise ValueError(
+            f"process_index {process_index} out of range [0, {process_count})"
+        )
+    base, extra = divmod(n_shards, process_count)
+    lo = process_index * base + min(process_index, extra)
+    hi = lo + base + (1 if process_index < extra else 0)
+    return range(lo, hi)
 
 
 def specs_for_tree(axes_tree, rules: Mapping, mesh: Mesh):

@@ -63,6 +63,7 @@ _B_BITS = 5                              # bit-in-word (uint32)
 __all__ = [
     "BlockSparseBitmap",
     "pack_bipartite",
+    "merge_block_sparse",
     "streamed_footprint_bytes",
     "fits_vmem",
     "TILE",
@@ -180,8 +181,119 @@ class BlockSparseBitmap:
         return dense
 
 
+def _slot_layout(ub_rows: np.ndarray, ub_cols: np.ndarray, n_rt: int):
+    """Canonical slot-stream layout from sorted unique (row, src) blocks:
+    per row tile, real slots in ascending source order, one all-zero pad
+    slot for each empty row tile.  Shared by :func:`pack_bipartite` and
+    :func:`merge_block_sparse` so a merged pack is byte-identical to a
+    one-shot pack."""
+    counts = np.bincount(ub_rows, minlength=n_rt)
+    empty = np.flatnonzero(counts == 0)
+    all_rows = np.concatenate([ub_rows, empty])
+    all_cols = np.concatenate([ub_cols, np.zeros(empty.size, dtype=np.int64)])
+    order = np.argsort(all_rows, kind="stable")
+    slot_row = all_rows[order].astype(np.int32)
+    slot_src = all_cols[order].astype(np.int32)
+    n_slots = slot_row.size
+    slot_of = np.empty(n_slots, dtype=np.int64)
+    slot_of[order] = np.arange(n_slots)
+    row_count = np.bincount(slot_row, minlength=n_rt).astype(np.int32)
+    row_start = np.concatenate(
+        [[0], np.cumsum(row_count[:-1])]
+    ).astype(np.int32)
+    return slot_row, slot_src, row_start, row_count, slot_of, n_slots
+
+
+def _popcount(bitmaps: np.ndarray) -> int:
+    """Total set bits across a bitmap stack (the packed edge count)."""
+    fn = getattr(np, "bitwise_count", None)
+    if fn is not None:
+        return int(fn(bitmaps).sum())
+    return int(np.unpackbits(bitmaps.view(np.uint8)).sum())
+
+
+def merge_block_sparse(parts: "list[BlockSparseBitmap]") -> BlockSparseBitmap:
+    """Merge per-shard packed incidences into one (DESIGN.md §7).
+
+    Every part must pack a disjoint edge subset of the *same* logical
+    matrix (equal ``n_dst``/``n_src``).  Slots sharing a (row tile, src
+    tile) block are OR-folded; pad slots are dropped and re-derived; the
+    canonical slot ordering is rebuilt — so the result is byte-identical
+    to packing all edges at once, which is what lets sharded extraction
+    build ``DevicePackedLayer`` operands shard-at-a-time without ever
+    sorting the full edge list in one shot.  Overlapping edges (the same
+    (src, dst) cell set in two parts) are rejected, matching
+    :func:`pack_bipartite`'s duplicate check.
+    """
+    if not parts:
+        raise ValueError("merge_block_sparse needs at least one part")
+    n_dst, n_src = parts[0].n_dst, parts[0].n_src
+    for p in parts:
+        if p.n_dst != n_dst or p.n_src != n_src:
+            raise ValueError("parts disagree on logical matrix shape")
+    n_rt = max(-(-n_dst // TILE), 1)
+    n_st = max(-(-n_src // TILE), 1)
+    rows, cols, maps = [], [], []
+    total_bits = 0
+    for p in parts:
+        live = p.bitmaps.any(axis=(1, 2))  # drop pad slots
+        live_maps = p.bitmaps[live]
+        rows.append(p.slot_row[live].astype(np.int64))
+        cols.append(p.slot_src[live].astype(np.int64))
+        maps.append(live_maps)
+        total_bits += _popcount(live_maps)
+    rows_c = np.concatenate(rows) if rows else np.empty(0, np.int64)
+    cols_c = np.concatenate(cols) if cols else np.empty(0, np.int64)
+    maps_c = (
+        np.concatenate(maps)
+        if maps and sum(m.shape[0] for m in maps)
+        else np.zeros((0, TILE, WORDS), dtype=np.uint32)
+    )
+    key = rows_c * n_st + cols_c
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    starts = (
+        np.flatnonzero(np.r_[True, key_s[1:] != key_s[:-1]])
+        if key_s.size
+        else np.empty(0, dtype=np.int64)
+    )
+    uniq = key_s[starts] if key_s.size else np.empty(0, dtype=np.int64)
+    flat = maps_c[order].reshape(-1, TILE * WORDS)
+    merged = (
+        np.bitwise_or.reduceat(flat, starts, axis=0)
+        if starts.size
+        else np.zeros((0, TILE * WORDS), dtype=np.uint32)
+    )
+    if _popcount(merged) != total_bits:
+        raise ValueError(
+            "merge_block_sparse requires disjoint edge shards "
+            "(a (src, dst) cell is set in more than one part)"
+        )
+    slot_row, slot_src, row_start, row_count, slot_of, n_slots = _slot_layout(
+        uniq // n_st, uniq % n_st, n_rt
+    )
+    full = np.concatenate(
+        [merged, np.zeros((n_slots - uniq.size, TILE * WORDS), dtype=np.uint32)]
+    )
+    # slot i holds the block that _slot_layout placed at position i:
+    # candidate j (real blocks first, pads after) lands at slot slot_of[j]
+    bitmaps = np.empty((n_slots, TILE * WORDS), dtype=np.uint32)
+    bitmaps[slot_of] = full
+    return BlockSparseBitmap(
+        slot_src=slot_src,
+        slot_row=slot_row,
+        bitmaps=bitmaps.reshape(n_slots, TILE, WORDS),
+        row_start=row_start,
+        row_count=row_count,
+        n_dst=n_dst,
+        n_src=n_src,
+    )
+
+
 def pack_bipartite(
-    edges: BipartiteEdges, method: str = "reduceat"
+    edges: BipartiteEdges,
+    method: str = "reduceat",
+    shard_edges: Optional[int] = None,
 ) -> BlockSparseBitmap:
     """Pack dst-major: y[dst] += x[src]  ==  y = B @ x with B[dst, src]=1.
 
@@ -196,9 +308,33 @@ def pack_bipartite(
     ``'scatter'`` is the original algorithm (two ``np.unique`` sorts plus
     an unbuffered ``np.bitwise_or.at`` scatter), kept as the before/after
     baseline for ``benchmarks/bench_kernels.py``.
+
+    ``shard_edges`` bounds the edges packed in one shot (DESIGN.md §7):
+    larger edge lists are packed slice by slice and OR-merged
+    *incrementally* with :func:`merge_block_sparse` — byte-identical
+    output, with resident packing state bounded by the accumulated packed
+    form plus one slice's pack (never all slices at once, whose per-slice
+    pad slots would otherwise dwarf the final structure on tall
+    matrices).
     """
     if method not in ("reduceat", "scatter"):
         raise ValueError(f"unknown pack method {method!r}")
+    if shard_edges is not None and edges.n_edges > shard_edges:
+        width = max(int(shard_edges), 1)
+        acc: Optional[BlockSparseBitmap] = None
+        for lo in range(0, edges.n_edges, width):
+            part = pack_bipartite(
+                BipartiteEdges(
+                    edges.src[lo : lo + width],
+                    edges.dst[lo : lo + width],
+                    edges.n_src,
+                    edges.n_dst,
+                ),
+                method=method,
+            )
+            acc = part if acc is None else merge_block_sparse([acc, part])
+        assert acc is not None
+        return acc
     src = edges.src
     dst = edges.dst
     n_rt = max(-(-edges.n_dst // TILE), 1)
@@ -240,25 +376,11 @@ def pack_bipartite(
         ) if bkey_s.size else np.empty(0, dtype=np.int64)
         uniq = bkey_s[block_bounds] if bkey_s.size else np.empty(0, np.int64)
 
-    ub_rows = uniq // n_st
-    ub_cols = uniq % n_st
     # pad every empty row tile with one all-zero slot so each output tile
     # is visited (and therefore written) by the kernel
-    counts = np.bincount(ub_rows, minlength=n_rt)
-    empty = np.flatnonzero(counts == 0)
-    all_rows = np.concatenate([ub_rows, empty])
-    all_cols = np.concatenate([ub_cols, np.zeros(empty.size, dtype=np.int64)])
-    order = np.argsort(all_rows, kind="stable")
-    slot_row = all_rows[order].astype(np.int32)
-    slot_src = all_cols[order].astype(np.int32)
-    n_slots = slot_row.size
-    slot_of = np.empty(n_slots, dtype=np.int64)
-    slot_of[order] = np.arange(n_slots)
-
-    row_count = np.bincount(slot_row, minlength=n_rt).astype(np.int32)
-    row_start = np.concatenate(
-        [[0], np.cumsum(row_count[:-1])]
-    ).astype(np.int32)
+    slot_row, slot_src, row_start, row_count, slot_of, n_slots = _slot_layout(
+        uniq // n_st, uniq % n_st, n_rt
+    )
 
     flat = np.zeros(n_slots * TILE * WORDS, dtype=np.uint32)
     if src.size:

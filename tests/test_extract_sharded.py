@@ -1,0 +1,361 @@
+"""Sharded extraction parity suite (DESIGN.md §7).
+
+The merge-step contract: for any shard count — including one shard, a
+ragged last shard, and shards with no rows at all — the sharded pipeline
+must produce a ``CondensedGraph`` and ``NodeSpace`` *byte-identical* to
+the unsharded build (same arrays, same order, same dtypes), and the
+threaded ``ExtractionBudget`` must enforce its per-shard resident-row
+limit by raising, never by spilling.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExtractionBudget,
+    ExtractionBudgetError,
+    extract,
+    extract_sharded,
+    graphs_identical,
+)
+from repro.core.condensed import BipartiteEdges, merge_sorted_unique
+from repro.core.extract import NodeSpace
+from repro.core.relational import (
+    Catalog,
+    ShardedTable,
+    Table,
+    hash_partition,
+    shard_bounds,
+)
+from repro.data.synth import dblp_catalog, tpch_catalog, univ_catalog
+
+Q_DBLP = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+Q_TPCH = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+Q_UNIV = """
+Nodes(ID, Name) :- Instructor(ID, Name).
+Nodes(ID, Name) :- Student(ID, Name).
+Edges(ID1, ID2) :- TaughtCourse(ID1, courseId), TookCourse(ID2, courseId).
+"""
+
+
+@pytest.fixture(scope="module")
+def dblp():
+    # 401 authors / 701 pubs: indivisible by every tested shard count, so
+    # the last shard is always ragged
+    return dblp_catalog(n_authors=401, n_pubs=701, mean_authors_per_pub=5.0, seed=11)
+
+
+def _assert_parity(catalog, query, n_shards, mode="auto", preprocess=False):
+    base = extract(catalog, query, mode=mode, preprocess=preprocess)
+    got = extract_sharded(
+        catalog, query, n_shards=n_shards, mode=mode, preprocess=preprocess
+    )
+    assert graphs_identical(base.graph, got.graph)
+    assert np.array_equal(base.nodes.keys, got.nodes.keys)
+    assert base.nodes.keys.dtype == got.nodes.keys.dtype
+    assert np.array_equal(base.nodes.type_ids, got.nodes.type_ids)
+    assert base.nodes.type_names == got.nodes.type_names
+    assert base.dropped_endpoints == got.dropped_endpoints
+    assert got.n_shards == n_shards
+    assert got.budget is not None
+    return base, got
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 7])
+@pytest.mark.parametrize("mode", ["auto", "condensed", "expanded"])
+def test_dblp_parity_all_modes(dblp, n_shards, mode):
+    _assert_parity(dblp, Q_DBLP, n_shards, mode=mode)
+
+
+@pytest.mark.parametrize("n_shards", [2, 7])
+def test_tpch_multilayer_parity(n_shards):
+    cat = tpch_catalog(seed=12)
+    base, got = _assert_parity(cat, Q_TPCH, n_shards, mode="condensed")
+    # the condensed plan must really be multi-layer for this to test the
+    # local->global virtual-id remap across several layers
+    assert base.graph.chains[0].n_layers == 3
+
+
+@pytest.mark.parametrize("n_shards", [2, 5])
+def test_univ_heterogeneous_parity(n_shards):
+    """Two Nodes rules: the sorted-key NodeSpace union must keep the
+    first-rule-wins type assignment and the property scatter order."""
+    cat = univ_catalog(seed=13)
+    base, got = _assert_parity(cat, Q_UNIV, n_shards)
+    assert "Name" in got.graph.node_properties
+    assert np.array_equal(
+        base.graph.node_properties["Name"], got.graph.node_properties["Name"]
+    )
+
+
+def test_preprocess_parity(dblp):
+    _assert_parity(dblp, Q_DBLP, 3, mode="condensed", preprocess=True)
+
+
+def test_selection_predicate_parity(dblp):
+    q = """
+    Nodes(ID, Name) :- Author(ID, Name).
+    Edges(ID1, ID2) :- AuthorPub(ID1, PubID), Pub(PubID, year),
+                       AuthorPub(ID2, PubID), year > 2010.
+    """
+    _assert_parity(dblp, q, 4)
+
+
+def test_empty_shards_parity():
+    """More shards than rows: trailing shards are empty, the merge must
+    still reproduce the unsharded build exactly."""
+    tiny = dblp_catalog(n_authors=6, n_pubs=5, mean_authors_per_pub=2.0, seed=14)
+    for mode in ("auto", "condensed"):
+        _assert_parity(tiny, Q_DBLP, 50, mode=mode)
+
+
+def test_empty_node_space_sharded(dblp):
+    """A Nodes statement matching zero rows: every shard is empty and the
+    merged space finds nothing — same contract as the unsharded path."""
+    q = """
+    Nodes(ID, Name) :- Author(ID, Name), ID < 0.
+    Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+    """
+    base, got = _assert_parity(dblp, q, 3, mode="condensed")
+    assert got.graph.n_real == 0
+    assert got.dropped_endpoints > 0
+
+
+# -- budget accounting -------------------------------------------------------
+
+def test_budget_violation_raises(dblp):
+    with pytest.raises(ExtractionBudgetError):
+        extract_sharded(dblp, Q_DBLP, n_shards=2, max_resident_rows=10)
+
+
+def test_budget_enforced_not_spilled(dblp):
+    """A satisfiable budget passes and the accounting is the evidence:
+    peak per-shard residency never exceeded the cap."""
+    probe = extract_sharded(dblp, Q_DBLP, n_shards=8, mode="condensed")
+    cap = probe.budget.peak_resident_rows
+    res = extract_sharded(
+        dblp, Q_DBLP, n_shards=8, mode="condensed", max_resident_rows=cap
+    )
+    assert res.budget.max_resident_rows == cap
+    assert res.budget.peak_resident_rows <= cap
+    # one fewer shard means bigger blocks: the same cap must now fail
+    with pytest.raises(ExtractionBudgetError):
+        extract_sharded(
+            dblp, Q_DBLP, n_shards=2, mode="condensed",
+            max_resident_rows=max(cap // 3, 1),
+        )
+
+
+def test_budget_shrinks_with_shard_count(dblp):
+    p1 = extract_sharded(dblp, Q_DBLP, n_shards=1, mode="condensed")
+    p8 = extract_sharded(dblp, Q_DBLP, n_shards=8, mode="condensed")
+    assert p8.budget.peak_resident_rows < p1.budget.peak_resident_rows
+    assert p8.budget.n_shards_processed > p1.budget.n_shards_processed
+    assert len(p8.budget.shard_peaks) == p8.budget.n_shards_processed
+    assert max(p8.budget.shard_peaks) == p8.budget.peak_resident_rows
+    assert p8.budget.resident_rows == 0  # everything released at the end
+
+
+def test_budget_forces_instrumented_path(dblp):
+    """budget alone (n_shards=1) routes through the sharded pipeline and
+    still reproduces the unsharded build byte-for-byte."""
+    base = extract(dblp, Q_DBLP)
+    got = extract(dblp, Q_DBLP, budget=ExtractionBudget())
+    assert graphs_identical(base.graph, got.graph)
+    assert got.budget.peak_resident_rows > 0
+
+
+# -- NodeSpace sort invariant (the hoisted lookup precondition) --------------
+
+def test_node_space_rejects_unsorted_keys():
+    with pytest.raises(ValueError, match="sorted"):
+        NodeSpace(
+            keys=np.array([3, 1, 2]),
+            type_ids=np.zeros(3, dtype=np.int32),
+            type_names=["t"],
+        )
+
+
+def test_node_space_rejects_duplicate_keys():
+    with pytest.raises(ValueError, match="sorted"):
+        NodeSpace(
+            keys=np.array([1, 2, 2]),
+            type_ids=np.zeros(3, dtype=np.int32),
+            type_names=["t"],
+        )
+
+
+def test_node_space_accepts_sorted_and_empty():
+    s = NodeSpace(
+        keys=np.array([1, 5, 9]),
+        type_ids=np.zeros(3, dtype=np.int32),
+        type_names=["t"],
+    )
+    idx, found = s.lookup(np.array([5, 7]))
+    assert idx[0] == 1 and found[0] and not found[1]
+    empty = NodeSpace(
+        keys=np.empty(0, dtype=np.int64),
+        type_ids=np.empty(0, dtype=np.int32),
+        type_names=[],
+    )
+    _, found = empty.lookup(np.array([1]))
+    assert not found.any()
+
+
+# -- sharded table views -----------------------------------------------------
+
+def test_shard_bounds_cover_and_order():
+    for n, k in [(10, 3), (7, 7), (3, 8), (0, 4), (100, 1)]:
+        bounds = shard_bounds(n, k)
+        assert len(bounds) == k
+        flat = [i for lo, hi in bounds for i in range(lo, hi)]
+        assert flat == list(range(n))
+    with pytest.raises(ValueError):
+        shard_bounds(5, 0)
+
+
+def test_sharded_table_rows_mode_reassembles():
+    t = Table("T", {"a": np.arange(11), "b": np.arange(11) % 3})
+    st = ShardedTable(t, 4)
+    assert len(st) == 4
+    assert sum(st.shard_rows(s) for s in range(4)) == 11
+    re = np.concatenate([st.shard(s).column("a") for s in range(4)])
+    assert np.array_equal(re, t.column("a"))
+    # per-shard stats: shard 0 holds rows [0, 3) of column a
+    assert st.stats(0, "a").n_distinct == 3
+    assert st.stats(0, "a").max_value == 2.0
+
+
+def test_sharded_table_hash_mode_colocates_keys():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 20, size=200)
+    t = Table("T", {"k": keys, "v": np.arange(200)})
+    st = ShardedTable(t, 5, mode="hash", key="k")
+    # every key lands in exactly one shard, and the union is the table
+    seen = {}
+    total = 0
+    for s in range(5):
+        sh = st.shard(s)
+        total += len(sh)
+        for k in np.unique(sh.column("k")):
+            assert seen.setdefault(int(k), s) == s
+    assert total == 200
+    # shard assignment matches the hash function's contract
+    sid = hash_partition(keys, 5)
+    assert np.array_equal(sid, hash_partition(keys.copy(), 5))
+    with pytest.raises(ValueError):
+        ShardedTable(t, 3, mode="hash")  # key required
+    with pytest.raises(ValueError):
+        ShardedTable(t, 3, mode="banana")
+
+
+def test_hash_partition_cross_table_consistent():
+    """The join-key contract: the same key must land in the same shard no
+    matter which table (or key population) it sits in — otherwise
+    per-shard joins of two hash-partitioned sides would drop matches."""
+    rng = np.random.default_rng(9)
+    r_keys = rng.integers(0, 1000, size=500)
+    s_keys = np.concatenate([r_keys[::3], rng.integers(1000, 2000, size=200)])
+    for n in (2, 5, 9):
+        r_sid = hash_partition(r_keys, n)
+        s_sid = hash_partition(s_keys, n)
+        common = np.intersect1d(r_keys, s_keys)
+        for k in common:
+            assert (
+                r_sid[r_keys == k][0] == s_sid[s_keys == k][0]
+            ), f"key {k} split across shards"
+    # string keys use value-determined codes too
+    a = np.array(["alpha", "beta", "gamma"])
+    b = np.array(["gamma", "delta", "alpha", "zz"])
+    ha, hb = hash_partition(a, 4), hash_partition(b, 4)
+    assert ha[2] == hb[0] and ha[0] == hb[2]
+
+
+# -- merge primitives --------------------------------------------------------
+
+def test_merge_sorted_unique_matches_global():
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 50, size=300)
+    parts = np.array_split(vals, 6)
+    merged = merge_sorted_unique([np.unique(p) for p in parts])
+    assert np.array_equal(merged, np.unique(vals))
+    assert merge_sorted_unique([]).size == 0
+
+
+# -- shard-at-a-time packing -------------------------------------------------
+
+def test_pack_bipartite_sharded_byte_identical():
+    from repro.kernels.pack import merge_block_sparse, pack_bipartite
+
+    rng = np.random.default_rng(21)
+    key = rng.choice(400 * 300, size=5000, replace=False)
+    e = BipartiteEdges(key % 400, key // 400, 400, 300)
+    base = pack_bipartite(e)
+    for k in (17, 512, 4999, 6000):
+        got = pack_bipartite(e, shard_edges=k)
+        for f in ("slot_src", "slot_row", "bitmaps", "row_start", "row_count"):
+            assert np.array_equal(getattr(base, f), getattr(got, f)), (k, f)
+        assert (got.n_dst, got.n_src) == (base.n_dst, base.n_src)
+    # overlapping shards are duplicate edges: rejected like the one-shot pack
+    p1 = pack_bipartite(BipartiteEdges([0, 1], [0, 1], 4, 4))
+    p2 = pack_bipartite(BipartiteEdges([1, 2], [1, 2], 4, 4))
+    with pytest.raises(ValueError, match="disjoint"):
+        merge_block_sparse([p1, p2])
+    with pytest.raises(ValueError):
+        merge_block_sparse([])
+
+
+def test_to_device_packed_shard_at_a_time(dblp):
+    """Engine wiring: packed operands built shard-at-a-time equal the
+    one-shot ones, so kernel dispatch sees identical layouts."""
+    from repro.core import engine
+
+    g = extract(dblp, Q_DBLP, mode="condensed").graph
+    one = engine.to_device_packed(g)
+    sharded = engine.to_device_packed(g, pack_shard_edges=256)
+    for ca, cb in zip(one.chains, sharded.chains):
+        for la, lb in zip(ca, cb):
+            assert (la.fwd is None) == (lb.fwd is None)
+            if la.fwd is not None:
+                assert np.array_equal(
+                    np.asarray(la.fwd.bitmaps), np.asarray(lb.fwd.bitmaps)
+                )
+                assert np.array_equal(
+                    np.asarray(la.rev.bitmaps), np.asarray(lb.rev.bitmaps)
+                )
+                assert np.array_equal(
+                    np.asarray(la.fwd.slot_src), np.asarray(lb.fwd.slot_src)
+                )
+
+
+# -- end-to-end pipeline + multi-host shard ranges ---------------------------
+
+def test_sharded_extract_to_device_pipeline():
+    from repro.core import algorithms
+    from repro.data.pipeline import sharded_extract_to_device
+
+    cat = dblp_catalog(n_authors=120, n_pubs=200, mean_authors_per_pub=4.0, seed=15)
+    res, dev = sharded_extract_to_device(cat, Q_DBLP, n_shards=3, packed=False)
+    assert res.budget.peak_resident_rows > 0
+    pr = np.asarray(algorithms.pagerank(dev, num_iters=5))
+    assert pr.shape == (res.graph.n_real,)
+    assert np.isfinite(pr).all()
+
+
+def test_extraction_shard_range_partitions():
+    from repro.distributed.sharding import extraction_shard_range
+
+    for n_shards, procs in [(10, 4), (3, 8), (16, 1), (5, 5)]:
+        covered = []
+        for p in range(procs):
+            covered.extend(extraction_shard_range(n_shards, p, procs))
+        assert covered == list(range(n_shards))
+    assert list(extraction_shard_range(4, 0, 1)) == [0, 1, 2, 3]
+    with pytest.raises(ValueError):
+        extraction_shard_range(4, 2, 2)
