@@ -8,10 +8,25 @@ DBLP catalog: for n_shards ∈ {1, 2, 7} the sharded build is *asserted*
 byte-identical to the unsharded one and then re-run under an enforced
 ``max_resident_rows`` budget — an assertion failure here fails the whole
 bench section, which is the scripts/check.sh gate for budget accounting.
+
+The ``extract_dblp_spill{2,7}`` rows gate the out-of-core assembly path
+(DESIGN.md §8) the same way: spilled extraction is asserted
+byte-identical, its peak resident assembly bytes are asserted *strictly
+below* the no-spill accumulation, and the tree-reduce merge wall time is
+recorded (``merge_us`` via a catalog-free ``merge_spilled_graph``
+re-merge of the finished spill).
 """
 from __future__ import annotations
 
-from repro.core import extract, extract_sharded, graphs_identical
+import os
+import tempfile
+
+from repro.core import (
+    extract,
+    extract_sharded,
+    graphs_identical,
+    merge_spilled_graph,
+)
 from repro.data.synth import dblp_catalog, tpch_catalog, univ_catalog
 
 from .common import emit, time_call
@@ -72,6 +87,7 @@ def run(smoke: bool = False) -> list:
             ),
         ))
     rows.extend(_sharded_rows(cases[0], repeats))
+    rows.extend(_spill_rows(cases[0], repeats))
     emit(rows)
     return rows
 
@@ -103,5 +119,57 @@ def _sharded_rows(dblp_case, repeats: int) -> list:
             t_s * 1e6,
             f"byte_identical=1;peak_resident_rows={peak};"
             f"budget_enforced={peak}",
+        ))
+    return rows
+
+
+def _spill_rows(dblp_case, repeats: int) -> list:
+    """Out-of-core assembly gate (DESIGN.md §8): for n_shards ∈ {2, 7}
+    the spilled build must be byte-identical to the unsharded one AND its
+    peak resident assembly bytes must be strictly below the no-spill
+    accumulation (the point of spilling).  Also records the tree-reduce
+    merge wall time from a ``merge_spilled_graph`` re-merge of the
+    finished spill.  Any assertion failure fails the bench section and
+    therefore scripts/check.sh."""
+    name, cat, q = dblp_case
+    base = extract(cat, q, mode="auto")
+    rows = []
+    for n in (2, 7):
+        resident = extract_sharded(cat, q, n_shards=n)
+        with tempfile.TemporaryDirectory() as td:
+            sp = os.path.join(td, "spill")
+            t_total = time_call(
+                lambda n=n, sp=sp: extract_sharded(
+                    cat, q, n_shards=n, spill_dir=sp
+                ),
+                repeats=repeats,
+            )
+            res = extract_sharded(cat, q, n_shards=n, spill_dir=sp)
+            assert graphs_identical(base.graph, res.graph), (
+                f"spilled extraction (n_shards={n}) is not byte-identical "
+                "to the unsharded build"
+            )
+            spill_peak = res.budget.peak_assembly_bytes
+            resident_peak = resident.budget.peak_assembly_bytes
+            assert spill_peak < resident_peak, (
+                f"spilling did not reduce peak assembly residency "
+                f"({spill_peak} >= {resident_peak})"
+            )
+            assert res.budget.spilled_bytes > 0
+            assert res.budget.resident_assembly_bytes == 0
+            # reuse_final=False forces a real tree re-merge from the
+            # shard records — this times the reduce, not a final read
+            t_merge = time_call(
+                lambda sp=sp: merge_spilled_graph(sp, reuse_final=False)[0],
+                repeats=repeats,
+            )
+        rows.append((
+            f"extract_{name}_spill{n}",
+            t_total * 1e6,
+            f"byte_identical=1;spill_peak_bytes={spill_peak};"
+            f"resident_peak_bytes={resident_peak};"
+            f"spilled_bytes={res.budget.spilled_bytes};"
+            f"merge_us={t_merge * 1e6:.1f};"
+            f"merge_rounds={res.budget.n_merge_rounds}",
         ))
     return rows

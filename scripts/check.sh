@@ -16,7 +16,10 @@ python scripts/check_docs.py
 echo "== smoke benches (every section at toy sizes) =="
 # the extraction section asserts sharded-extraction byte-identity and
 # budget accounting (DESIGN.md §7) — an ExtractionBudget violation or a
-# merge-step mismatch fails this step
+# merge-step mismatch fails this step — and gates the out-of-core
+# assembly path (DESIGN.md §8) via the extract_dblp_spill{2,7} rows:
+# spilled peak resident assembly bytes must be strictly below the
+# no-spill accumulation and the tree-reduce re-merge byte-identical
 python -m benchmarks.run --smoke
 
 echo "== kernels perf cells (BENCH_kernels.json) =="

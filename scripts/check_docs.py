@@ -9,7 +9,15 @@ deleted by a refactor fails scripts/check.sh here instead of rotting
 silently — exactly the class of drift the PR-3/PR-4 refactors kept
 producing.
 
-Exit code 0 = clean; 1 = dead references (listed on stderr).
+On top of the token scan, REQUIRED_SECTIONS pins sections that later
+code gates on: DESIGN.md §8 (spill + multi-host merge) and the README's
+"Out-of-core assembly" subsection must exist — a doc reorganization that
+drops one fails here, and because the sections exist their backticked
+symbol references (``ShardSpillStore``, ``merge_spilled_graph``,
+``MultihostSpillExtraction``, ...) go through the same dead-reference
+scan as everything else.
+
+Exit code 0 = clean; 1 = dead references / missing sections (stderr).
 """
 from __future__ import annotations
 
@@ -21,6 +29,13 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "DESIGN.md"]
 CODE_DIRS = ["src", "tests", "benchmarks", "examples", "scripts"]
 CODE_EXT = {".py", ".sh", ".ini", ".json", ".md"}
+
+# Sections the rest of the gate (tests, benches) references by name:
+# each doc must contain every listed heading, verbatim prefix match.
+REQUIRED_SECTIONS = {
+    "DESIGN.md": ["## §7 ", "## §8 "],
+    "README.md": ["## Larger-than-memory extraction", "### Out-of-core assembly"],
+}
 
 # Tokens that are prose, math, or shell notation rather than symbol
 # references; single letters and anything < 4 chars are skipped anyway.
@@ -98,25 +113,37 @@ def _check(token: str, corpus: str) -> bool:
 def main() -> int:
     corpus = _corpus()
     dead = []
+    missing_sections = []
     for doc in DOCS:
         with open(os.path.join(ROOT, doc), encoding="utf-8") as fh:
             text = fh.read()
-        for lineno, line in enumerate(text.splitlines(), 1):
+        lines = text.splitlines()
+        for heading in REQUIRED_SECTIONS.get(doc, []):
+            if not any(l.startswith(heading) for l in lines):
+                missing_sections.append((doc, heading))
+        for lineno, line in enumerate(lines, 1):
             for token in _TOKEN.findall(line):
                 if not _check(token, corpus):
                     dead.append((doc, lineno, token))
+    if missing_sections:
+        print("required doc sections missing:", file=sys.stderr)
+        for doc, heading in missing_sections:
+            print(f"  {doc}: `{heading}...`", file=sys.stderr)
     if dead:
         print("dead doc references (symbol/path not found in the tree):",
               file=sys.stderr)
         for doc, lineno, token in dead:
             print(f"  {doc}:{lineno}: `{token}`", file=sys.stderr)
+    if dead or missing_sections:
         return 1
     n_tokens = sum(
         len(_TOKEN.findall(open(os.path.join(ROOT, d), encoding="utf-8").read()))
         for d in DOCS
     )
+    n_sections = sum(len(v) for v in REQUIRED_SECTIONS.values())
     print(f"docs check: {n_tokens} backticked references in "
-          f"{'/'.join(DOCS)} all resolve")
+          f"{'/'.join(DOCS)} all resolve; {n_sections} required sections "
+          "present")
     return 0
 
 

@@ -13,11 +13,24 @@ from .condensed import (
     graphs_identical,
 )
 from .dsl import ExtractionQuery, ParseError, parse
-from .extract import ExtractionResult, extract, extract_query, extract_sharded
+from .extract import (
+    ExtractionResult,
+    extract,
+    extract_query,
+    extract_sharded,
+    merge_spilled_graph,
+)
 from .planner import ExtractionBudget, ExtractionBudgetError
 from .relational import Catalog, ShardedTable, Table
 from .advisor import recommend
-from .serialize import export_edge_list, load_condensed, save_condensed
+from .serialize import (
+    ShardAssembly,
+    ShardSpillStore,
+    SpillError,
+    export_edge_list,
+    load_condensed,
+    save_condensed,
+)
 
 __all__ = [
     "BipartiteEdges",
@@ -37,8 +50,12 @@ __all__ = [
     "extract_query",
     "extract_sharded",
     "graphs_identical",
+    "merge_spilled_graph",
     "recommend",
     "save_condensed",
     "load_condensed",
     "export_edge_list",
+    "ShardAssembly",
+    "ShardSpillStore",
+    "SpillError",
 ]

@@ -462,9 +462,10 @@ def merge_sorted_unique(parts: Sequence[np.ndarray]) -> np.ndarray:
 def merge_chain_shards(
     shard_chains: Sequence[Chain],
     shard_layer_keys: Sequence[Sequence[np.ndarray]],
+    arity: Optional[int] = None,
 ) -> Tuple[Chain, List[np.ndarray]]:
     """Merge per-shard condensed chains into one global :class:`Chain`
-    (paper §4.2 Step 5, partition-parallel form; DESIGN.md §7).
+    (paper §4.2 Step 5, partition-parallel form; DESIGN.md §7/§8).
 
     Each shard arrives with its own *local* virtual-node id spaces
     (``shard_layer_keys[s][k]`` = sorted distinct values of postponed
@@ -483,9 +484,49 @@ def merge_chain_shards(
     for every value ``v`` a shard saw, and shard outputs are contiguous
     slices of the unsharded segment output, the merged edge arrays are
     byte-identical to the unsharded build's.
+
+    ``arity=None`` (default) merges all shards in one pass — the
+    DESIGN.md §7 behaviour, every shard resident at once.  ``arity=r``
+    runs the same operation as a tree reduce (DESIGN.md §8): consecutive
+    groups of ``r`` shards are merged per round until one remains.  The
+    union is associative and remapping composes
+    (``searchsorted(final, partial_keys)[searchsorted(partial, v)] ==
+    searchsorted(final, v)``), and groups stay consecutive, so the result
+    is byte-identical for every arity — but no round ever has more than
+    ``r`` shard chains plus one output resident, which is what lets the
+    out-of-core pipeline stream spilled shards two at a time.
     """
     if not shard_chains:
         raise ValueError("merge_chain_shards needs at least one shard")
+    if arity is not None:
+        if arity < 2:
+            raise ValueError(f"tree-reduce arity must be >= 2, got {arity}")
+        chains = list(shard_chains)
+        keys = [list(k) for k in shard_layer_keys]
+        while len(chains) > 1:
+            next_chains: List[Chain] = []
+            next_keys: List[List[np.ndarray]] = []
+            for i in range(0, len(chains), arity):
+                if i + 1 >= len(chains):  # carried singleton
+                    next_chains.append(chains[i])
+                    next_keys.append(keys[i])
+                    continue
+                c, k = _merge_chain_group(
+                    chains[i : i + arity], keys[i : i + arity]
+                )
+                next_chains.append(c)
+                next_keys.append(k)
+            chains, keys = next_chains, next_keys
+        return chains[0], list(keys[0])
+    return _merge_chain_group(shard_chains, shard_layer_keys)
+
+
+def _merge_chain_group(
+    shard_chains: Sequence[Chain],
+    shard_layer_keys: Sequence[Sequence[np.ndarray]],
+) -> Tuple[Chain, List[np.ndarray]]:
+    """Single-pass k-way merge of one group — the §7 merge body; both the
+    all-at-once path and each tree-reduce round reduce to this."""
     n_levels = len(shard_chains[0].edges)
     n_layers = n_levels - 1
     for c, keys in zip(shard_chains, shard_layer_keys):

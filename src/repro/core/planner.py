@@ -30,6 +30,7 @@ __all__ = [
     "bind_atom",
     "execute_segment",
     "execute_segment_sharded",
+    "execute_segment_shard",
     "ExtractionBudget",
     "ExtractionBudgetError",
 ]
@@ -38,15 +39,18 @@ __all__ = [
 class ExtractionBudgetError(RuntimeError):
     """Raised when a shard's resident working set exceeds the budget.
 
-    The sharded pipeline never silently spills: a violated budget aborts
-    extraction so the caller can re-shard (more shards = smaller blocks)
-    instead of quietly blowing host memory (DESIGN.md §7).
+    Per-shard transients (``max_resident_rows``) never spill: a violated
+    budget aborts extraction so the caller can re-shard (more shards =
+    smaller blocks) instead of quietly blowing host memory (DESIGN.md §7).
+    Assembly buffers (``max_assembly_bytes``) raise only when no
+    ``spill_dir`` was given — with one, the pipeline spills each shard's
+    output to disk as the shard finishes instead (DESIGN.md §8).
     """
 
 
 @dataclasses.dataclass
 class ExtractionBudget:
-    """Peak-resident-rows accounting for sharded extraction (DESIGN.md §7).
+    """Peak-resident accounting for sharded extraction (DESIGN.md §7/§8).
 
     The sharded-extraction analog of ``ExpansionAccounting``
     (:mod:`repro.core.condensed`): one instance is threaded through the
@@ -54,16 +58,27 @@ class ExtractionBudget:
     transient host array (bound atom blocks, filtered probe sides, join
     outputs) while it is resident.  ``peak_resident_rows`` is therefore an
     upper bound on the rows any single shard holds at once — the quantity
-    that must stay bounded for larger-than-memory extraction.  Per-shard
-    *outputs* (the edge/key arrays that become the condensed graph) are
-    released when the shard ends: they are streamed into the assembly
-    buffers, whose total size is the condensed graph itself, not a
-    per-shard transient.
+    that must stay bounded for larger-than-memory extraction.
 
-    ``max_resident_rows=None`` means account-only (no limit); otherwise
-    any charge that pushes ``resident_rows`` past the limit raises
-    :class:`ExtractionBudgetError` immediately — violations raise, they do
-    not spill.
+    Two accounts, two units:
+
+    * **Per-shard transients** (rows) — charged by :meth:`charge`,
+      capped by ``max_resident_rows``.  A violating charge raises
+      :class:`ExtractionBudgetError` immediately; transients never spill.
+    * **Assembly buffers** (bytes) — each shard's *output* (the edge /
+      key arrays awaiting the merge) charged by :meth:`charge_assembly`
+      while resident, capped by ``max_assembly_bytes``.  Without a spill
+      directory the outputs of every shard accumulate until the merge,
+      so ``peak_assembly_bytes`` grows with shard count and a cap
+      violation raises; with ``spill_enabled`` (the ``spill_dir=`` knob,
+      DESIGN.md §8) each shard's output is written to disk and released
+      as the shard finishes, so the peak stays bounded by roughly one
+      shard's output no matter how many shards run, and ``spilled_bytes``
+      records what went to disk instead.  Merge-phase residency (the
+      tree-reduce operands) is *reported* in
+      ``merge_peak_resident_bytes`` / ``n_merge_rounds`` but not capped:
+      the final round's output is the condensed graph itself, which must
+      fit by definition.
     """
 
     max_resident_rows: Optional[int] = None
@@ -74,6 +89,15 @@ class ExtractionBudget:
     n_rows_joined: int = 0           # total join-output rows across shards
     shard_peaks: List[int] = dataclasses.field(default_factory=list)
     _shard_peak: int = 0
+    # -- assembly-buffer account (bytes; DESIGN.md §8) -------------------
+    max_assembly_bytes: Optional[int] = None
+    spill_enabled: bool = False      # set by the pipeline when spill_dir given
+    resident_assembly_bytes: int = 0
+    peak_assembly_bytes: int = 0
+    spilled_bytes: int = 0           # total bytes written to spill records
+    n_spilled_records: int = 0
+    merge_peak_resident_bytes: int = 0  # max operand+output bytes in one merge group
+    n_merge_rounds: int = 0
 
     def charge(self, n_rows: int, what: str = "rows") -> None:
         self.resident_rows += int(n_rows)
@@ -94,6 +118,58 @@ class ExtractionBudget:
     def release(self, n_rows: int) -> None:
         self.resident_rows -= int(n_rows)
 
+    def charge_assembly(
+        self, n_bytes: int, what: str = "assembly buffer",
+        spilling: bool = False,
+    ) -> None:
+        """Charge bytes of shard output held resident awaiting the merge.
+
+        Raises :class:`ExtractionBudgetError` past ``max_assembly_bytes``
+        unless the charging pipeline is spilling (``spilling=True``) — a
+        spilling caller bounds residency by writing the buffer out and
+        releasing it, so the cap is enforced by construction rather than
+        by raising (a single shard output larger than the cap still
+        raises: it must be resident to be built; use more shards).
+        ``spilling`` is strictly per-call — the ``spill_enabled`` field
+        is bookkeeping for :meth:`summary`, never an enforcement switch —
+        so a budget that came out of a spilled run and is reused on a
+        later non-spilling run keeps the cap enforced.
+        """
+        self.resident_assembly_bytes += int(n_bytes)
+        if self.resident_assembly_bytes > self.peak_assembly_bytes:
+            self.peak_assembly_bytes = self.resident_assembly_bytes
+        if (
+            self.max_assembly_bytes is not None
+            and self.resident_assembly_bytes > self.max_assembly_bytes
+        ):
+            if not spilling:
+                raise ExtractionBudgetError(
+                    f"assembly budget exceeded: {self.resident_assembly_bytes} "
+                    f"resident assembly bytes ({what}) > max_assembly_bytes="
+                    f"{self.max_assembly_bytes}; pass spill_dir= to assemble "
+                    "out of core, or raise the budget"
+                )
+            if int(n_bytes) > self.max_assembly_bytes:
+                raise ExtractionBudgetError(
+                    f"assembly budget unsatisfiable: a single {what} of "
+                    f"{n_bytes} bytes exceeds max_assembly_bytes="
+                    f"{self.max_assembly_bytes} even with spilling; "
+                    "extract with more shards"
+                )
+
+    def release_assembly(self, n_bytes: int) -> None:
+        self.resident_assembly_bytes -= int(n_bytes)
+
+    def note_spill(self, n_bytes: int) -> None:
+        """Record bytes handed off to a spill record (disk, not RAM)."""
+        self.spilled_bytes += int(n_bytes)
+        self.n_spilled_records += 1
+
+    def note_merge(self, n_bytes: int) -> None:
+        """Record one merge group's operand + output residency."""
+        if int(n_bytes) > self.merge_peak_resident_bytes:
+            self.merge_peak_resident_bytes = int(n_bytes)
+
     def begin_shard(self) -> None:
         self._shard_peak = self.resident_rows
 
@@ -103,13 +179,22 @@ class ExtractionBudget:
         self._shard_peak = self.resident_rows
 
     def summary(self) -> Dict[str, object]:
-        return {
+        out: Dict[str, object] = {
             "max_resident_rows": self.max_resident_rows,
             "peak_resident_rows": self.peak_resident_rows,
             "n_shards_processed": self.n_shards_processed,
             "n_segments_executed": self.n_segments_executed,
             "n_rows_joined": self.n_rows_joined,
+            "peak_assembly_bytes": self.peak_assembly_bytes,
         }
+        if self.max_assembly_bytes is not None:
+            out["max_assembly_bytes"] = self.max_assembly_bytes
+        if self.spill_enabled or self.spilled_bytes:
+            out["spilled_bytes"] = self.spilled_bytes
+            out["n_spilled_records"] = self.n_spilled_records
+            out["n_merge_rounds"] = self.n_merge_rounds
+            out["merge_peak_resident_bytes"] = self.merge_peak_resident_bytes
+        return out
 
 
 @dataclasses.dataclass
@@ -370,6 +455,39 @@ def execute_segment_sharded(
     are not charged; no full bound copy of any table is ever created on
     this path).
     """
+    return [
+        execute_segment_shard(
+            catalog, plan, seg, in_var, out_var, s, n_shards, budget
+        )
+        for s in range(n_shards)
+    ]
+
+
+def execute_segment_shard(
+    catalog: Catalog,
+    plan: ChainPlan,
+    seg: Tuple[int, int],
+    in_var: str,
+    out_var: str,
+    shard_index: int,
+    n_shards: int,
+    budget: Optional[ExtractionBudget] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One shard of :func:`execute_segment_sharded` (DESIGN.md §7/§8).
+
+    Runs shard ``shard_index`` of the segment's leading-base-relation row
+    partition through the remaining atoms and returns its ``(in_values,
+    out_values)`` pair.  Factored out of the all-shards loop so callers
+    can drive shards in any grouping — in particular the out-of-core
+    pipeline, which runs *every segment of one shard* before moving on,
+    letting that shard's whole assembled output spill to disk while later
+    shards are still unextracted, and the multi-host mapping
+    (``repro.distributed.sharding.extraction_shard_range``), which hands
+    each JAX process a contiguous slice of ``range(n_shards)``.  Budget
+    charges are identical per ``(segment, shard)`` regardless of the
+    driving order, so ``peak_resident_rows`` does not depend on who
+    loops.
+    """
     from .relational import ShardedTable
 
     i, j = seg
@@ -379,40 +497,38 @@ def execute_segment_sharded(
     probe_tables = [
         catalog.table(plan.atoms[k].relation) for k in range(i + 1, j + 1)
     ]
-    results: List[Tuple[np.ndarray, np.ndarray]] = []
-    for s in range(n_shards):
+    if budget is not None:
+        budget.begin_shard()
+    block = sharded.shard(shard_index)
+    if budget is not None:
+        budget.charge(len(block), "leading base block")
+    acc = _bind_table(block, plan.atoms[i], plan.rule.comparisons)
+    if budget is not None:
+        budget.charge(len(acc), "bound leading block")
+        budget.release(len(block))
+    for k, ptab in enumerate(probe_tables):
+        link = plan.link_vars[i + k]
+        probe = _probe_partition(
+            ptab, plan.atoms[i + 1 + k], plan.rule.comparisons,
+            link, acc.column(link), n_shards, budget,
+        )
+        joined = hash_join(acc, probe, link, link)
         if budget is not None:
-            budget.begin_shard()
-        block = sharded.shard(s)
-        if budget is not None:
-            budget.charge(len(block), "leading base block")
-        acc = _bind_table(block, plan.atoms[i], plan.rule.comparisons)
-        if budget is not None:
-            budget.charge(len(acc), "bound leading block")
-            budget.release(len(block))
-        for k, ptab in enumerate(probe_tables):
-            link = plan.link_vars[i + k]
-            probe = _probe_partition(
-                ptab, plan.atoms[i + 1 + k], plan.rule.comparisons,
-                link, acc.column(link), n_shards, budget,
-            )
-            joined = hash_join(acc, probe, link, link)
-            if budget is not None:
-                budget.charge(len(joined), "join output")
-                budget.n_rows_joined += len(joined)
-                budget.release(len(acc) + len(probe))
-            acc = joined
-        if in_var not in acc.column_names or out_var not in acc.column_names:
-            raise ValueError(
-                f"segment {seg} missing endpoint vars {in_var}/{out_var}; "
-                f"has {acc.column_names}"
-            )
-        results.append((acc.column(in_var), acc.column(out_var)))
-        if budget is not None:
-            # the shard's output is streamed into the assembly buffers
-            # (they become the condensed graph itself) — release it from
-            # the per-shard transient account
-            budget.release(len(acc))
-            budget.n_segments_executed += 1
-            budget.end_shard()
-    return results
+            budget.charge(len(joined), "join output")
+            budget.n_rows_joined += len(joined)
+            budget.release(len(acc) + len(probe))
+        acc = joined
+    if in_var not in acc.column_names or out_var not in acc.column_names:
+        raise ValueError(
+            f"segment {seg} missing endpoint vars {in_var}/{out_var}; "
+            f"has {acc.column_names}"
+        )
+    result = (acc.column(in_var), acc.column(out_var))
+    if budget is not None:
+        # the shard's output is streamed into the assembly buffers (its
+        # bytes are charged there via charge_assembly) — release it from
+        # the per-shard transient rows account
+        budget.release(len(acc))
+        budget.n_segments_executed += 1
+        budget.end_shard()
+    return result

@@ -91,13 +91,19 @@ def sharded_extract_to_device(
     packed: bool = False,
     pack_shard_edges: Optional[int] = None,
     correction_budget_triples: Optional[int] = None,
+    spill_dir: Optional[str] = None,
+    max_assembly_bytes: Optional[int] = None,
 ):
     """Catalog -> budgeted sharded extraction -> device graph, end to end.
 
-    The larger-than-memory serving pipeline (DESIGN.md §7): extraction
+    The larger-than-memory serving pipeline (DESIGN.md §7/§8): extraction
     runs in ``n_shards`` row partitions with per-shard transients capped
     at ``max_resident_rows`` (violations raise — see
-    :class:`repro.core.planner.ExtractionBudget`), the DEDUP-C correction
+    :class:`repro.core.planner.ExtractionBudget`) and — when
+    ``spill_dir`` is given — per-shard outputs spilled to disk as each
+    shard finishes, tree-reduce merged instead of held resident
+    (``max_assembly_bytes`` caps the assembly buffers; without a spill
+    directory an over-cap accumulation raises).  The DEDUP-C correction
     is built with the streaming fold (optionally under
     ``correction_budget_triples``), and — when ``packed`` — each layer's
     bitmap operands are packed shard-at-a-time (``pack_shard_edges``
@@ -111,6 +117,7 @@ def sharded_extract_to_device(
     res = extract_sharded(
         catalog, dsl_text, n_shards=n_shards,
         max_resident_rows=max_resident_rows, mode=mode,
+        spill_dir=spill_dir, max_assembly_bytes=max_assembly_bytes,
     )
     corr = dedup.build_correction_streaming(
         res.graph, budget_triples=correction_budget_triples

@@ -32,6 +32,8 @@ __all__ = [
     "GRAPH_RULES",
     "shard_frontier",
     "extraction_shard_range",
+    "merge_schedule",
+    "MultihostSpillExtraction",
 ]
 
 # Logical-axis rules for the condensed-graph engine (DESIGN.md §3/§5):
@@ -53,6 +55,10 @@ def _ctx() -> Tuple[Optional[Mesh], Optional[Mapping]]:
 
 @contextlib.contextmanager
 def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[Mapping]):
+    """Activate a (mesh, logical-axis rules) context for :func:`shard` /
+    :func:`logical_spec` calls in the dynamic scope (thread-local,
+    re-entrant).  ``None`` for either disables annotations — the same
+    model code then runs unconstrained (DESIGN.md §5)."""
     old = _ctx()
     _state.mesh, _state.rules = mesh, rules
     try:
@@ -62,6 +68,7 @@ def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[Mapping]):
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The mesh of the innermost :func:`use_mesh_rules` context, if any."""
     return _ctx()[0]
 
 
@@ -83,6 +90,8 @@ def logical_spec(
     rules: Optional[Mapping] = None,
     mesh: Optional[Mesh] = None,
 ) -> PartitionSpec:
+    """Resolve logical axis names to a ``PartitionSpec`` under the given
+    (or ambient) rules + mesh; empty spec outside any context."""
     m, r = _ctx()
     mesh = mesh or m
     rules = rules or r
@@ -96,6 +105,8 @@ def named_sharding(
     rules: Optional[Mapping] = None,
     mesh: Optional[Mesh] = None,
 ) -> Optional[NamedSharding]:
+    """:func:`logical_spec` wrapped in a ``NamedSharding`` for
+    ``jax.device_put`` / ``in_shardings``; ``None`` outside a context."""
     m, r = _ctx()
     mesh = mesh or m
     rules = rules or r
@@ -154,15 +165,23 @@ def extraction_shard_range(
     process_index: Optional[int] = None,
     process_count: Optional[int] = None,
 ) -> range:
-    """The contiguous extraction-shard ids this host owns (DESIGN.md §7).
+    """The contiguous extraction-shard ids this host owns (DESIGN.md §8).
 
     The sharded extraction pipeline (``repro.core.extract``,
     ``n_shards=...``) is embarrassingly parallel across shards until the
-    merge step; this maps the global shard space onto JAX processes so
-    each host runs ``extract``'s per-shard work for its own slice
-    (trailing hosts get one fewer shard when ``n_shards % process_count
-    != 0``).  Single-process (the CPU test container): the full range.
-    ``process_index``/``process_count`` default to
+    merge; this maps the global shard space onto JAX processes so each
+    host runs ``extract``'s per-shard work — and its process-local
+    pre-merge — for its own slice.  The division is ragged-safe in both
+    directions: trailing hosts get one fewer shard when ``n_shards %
+    process_count != 0``, and when ``n_shards < process_count`` the
+    trailing hosts get *empty* ranges (they spill nothing, pre-merge
+    nothing, and are simply absent from the cross-process reduce —
+    :class:`MultihostSpillExtraction` schedules the tree over the
+    processes with non-empty ranges only).  Ranges are contiguous and
+    ascending in ``process_index``, which is what lets the pairwise
+    reduce concatenate partner partials in shard order and stay
+    byte-identical.  Single-process (the CPU test container): the full
+    range.  ``process_index``/``process_count`` default to
     ``jax.process_index()``/``jax.process_count()``.
     """
     if process_index is None:
@@ -177,6 +196,276 @@ def extraction_shard_range(
     lo = process_index * base + min(process_index, extra)
     hi = lo + base + (1 if process_index < extra else 0)
     return range(lo, hi)
+
+
+def merge_schedule(n_partials: int) -> list:
+    """Log-depth pairwise reduce schedule over ``n_partials`` contiguous
+    partials (DESIGN.md §8).
+
+    Returns a list of rounds; each round is a list of ``(dst, src)``
+    index pairs, every pair independent within its round.  ``dst``
+    absorbs ``src``, and — because partials are ordered by the contiguous
+    shard ranges of :func:`extraction_shard_range` — ``src``'s
+    accumulated shard range always directly follows ``dst``'s, so the
+    merged partial is again a contiguous range and the final reduce at
+    index 0 concatenates every shard in order (the byte-identity
+    requirement).  Depth is ``ceil(log2(n_partials))``; a partial with no
+    partner in a round carries to the next unchanged.
+    """
+    if n_partials < 0:
+        raise ValueError(f"n_partials must be >= 0, got {n_partials}")
+    rounds = []
+    stride = 1
+    while stride < n_partials:
+        rounds.append([
+            (i, i + stride)
+            for i in range(0, n_partials, 2 * stride)
+            if i + stride < n_partials
+        ])
+        stride *= 2
+    return rounds
+
+
+def _sync_barrier(process_count: int):
+    """Default cross-phase barrier: no-op single-process, else
+    ``jax.experimental.multihost_utils.sync_global_devices``."""
+
+    def barrier(name: str) -> None:
+        if process_count == 1:
+            return
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(name)
+
+    return barrier
+
+
+class MultihostSpillExtraction:
+    """Multi-host sharded extraction with spill-to-disk assembly and a
+    log-depth cross-process tree-reduce merge (DESIGN.md §8).
+
+    Every JAX process runs the same program against the same catalog and
+    a *shared* spill directory (the exchange medium — spill records are
+    how processes hand partials to each other, so no array ever crosses
+    hosts in memory):
+
+    1. :meth:`phase_nodes` — each process binds and spills node-space
+       candidate records for its own shards
+       (:func:`extraction_shard_range`).
+    2. :meth:`phase_shards` — after a barrier, each process merges *all*
+       node records into the (identical-everywhere) global ``NodeSpace``,
+       extracts + spills its shard assemblies, and pre-merges them into
+       one process partial (``partial_p<index>``).
+    3. :meth:`phase_merge_round` — ``ceil(log2(P'))`` rounds of pairwise
+       partial merges per :func:`merge_schedule`, over the ``P'``
+       processes that own shards; one barrier per round.
+    4. :meth:`phase_finish` — every process loads the root partial and
+       builds the same ``CondensedGraph``; the root process finalizes the
+       spill manifest (making the directory a valid
+       :func:`repro.core.extract.merge_spilled_graph` input).
+
+    :meth:`run` drives all phases with the default barrier
+    (``multihost_utils.sync_global_devices`` when ``process_count > 1``,
+    no-op single-process — the CPU fallback).  Tests drive the phases
+    explicitly with simulated ``process_index``/``process_count`` and a
+    no-op barrier, which is exactly equivalent because every
+    cross-process data dependency goes through the spill directory at a
+    phase boundary.
+
+    The graph is byte-identical to ``extract(catalog, dsl_text)`` — the
+    multi-host reduce is the same associative sorted-key-union merge,
+    grouped differently.
+
+    Use a *fresh* spill directory per multi-process run: the single-host
+    pipeline clears a reused directory's stale records at start (it is
+    the only writer), but with concurrent processes that wipe would race
+    other processes' fresh records, so only the stale closing manifest is
+    invalidated here — leftover records from an earlier differently-
+    sharded run would be certified into the new manifest.
+    """
+
+    def __init__(
+        self,
+        catalog,
+        dsl_text: str,
+        n_shards: int,
+        spill_dir: str,
+        mode: str = "auto",
+        preprocess: bool = False,
+        max_resident_rows: Optional[int] = None,
+        max_assembly_bytes: Optional[int] = None,
+        merge_arity: int = 2,
+        process_index: Optional[int] = None,
+        process_count: Optional[int] = None,
+        barrier=None,
+    ) -> None:
+        from repro.core.dsl import parse
+        from repro.core.planner import ExtractionBudget
+        from repro.core.serialize import ShardSpillStore
+
+        self.catalog = catalog
+        self.query = parse(dsl_text)
+        self.n_shards = int(n_shards)
+        self.mode = mode
+        self.preprocess = preprocess
+        self.merge_arity = int(merge_arity)
+        self.process_index = (
+            jax.process_index() if process_index is None else int(process_index)
+        )
+        self.process_count = (
+            jax.process_count() if process_count is None else int(process_count)
+        )
+        self.my_shards = extraction_shard_range(
+            self.n_shards, self.process_index, self.process_count
+        )
+        # processes that own shards: the partial owners the reduce runs over
+        self.active = [
+            p for p in range(self.process_count)
+            if len(extraction_shard_range(self.n_shards, p, self.process_count))
+        ]
+        self.schedule = merge_schedule(len(self.active))
+        self.root = self.active[0]
+        self.barrier = barrier or _sync_barrier(self.process_count)
+        self.budget = ExtractionBudget(
+            max_resident_rows=max_resident_rows,
+            max_assembly_bytes=max_assembly_bytes,
+            spill_enabled=True,
+        )
+        self.store = ShardSpillStore(spill_dir)
+        self.nodes = None
+        self.props = None
+        self._plans = None
+        self._seconds = 0.0
+
+    def _partial_name(self, process_index: int) -> str:
+        return f"partial_p{process_index:05d}"
+
+    # -- phases ---------------------------------------------------------------
+    def phase_nodes(self) -> None:
+        """Spill node-space candidate records for my shard range."""
+        import time
+
+        from repro.core.extract import _spill_node_shards
+
+        t0 = time.perf_counter()
+        _spill_node_shards(
+            self.catalog, self.query.nodes_rules, self.n_shards,
+            self.my_shards, self.store, self.budget,
+        )
+        self._seconds += time.perf_counter() - t0
+
+    def phase_shards(self) -> None:
+        """Global node space from all processes' records, then extract,
+        spill, and pre-merge my shards into ``partial_p<me>``."""
+        import time
+
+        from repro.core.extract import (
+            _node_space_from_spill,
+            _plans_info,
+            _spill_chain_shards,
+            _write_nodespace_record,
+        )
+        from repro.core.serialize import tree_merge_records
+
+        t0 = time.perf_counter()
+        self.nodes, self.props = _node_space_from_spill(
+            self.store, self.query.nodes_rules, self.n_shards, self.budget
+        )
+        self._plans = _plans_info(self.catalog, self.query, self.mode)
+        names = _spill_chain_shards(
+            self.catalog, self._plans, self.nodes, self.n_shards,
+            self.my_shards, self.store, self.budget,
+        )
+        if names:
+            reduced, _ = tree_merge_records(
+                self.store, names, arity=self.merge_arity,
+                out_prefix=f"pre_p{self.process_index:05d}_",
+                budget=self.budget,
+            )
+            canonical = self._partial_name(self.process_index)
+            if reduced != canonical:
+                if reduced.startswith("pre_p"):
+                    # an intermediate partial: just move it (no payload
+                    # rewrite)
+                    self.store.rename_record(reduced, canonical)
+                else:
+                    # a leaf shard record (single-shard slice): keep the
+                    # leaf, copy it to the canonical partial name
+                    assembly, _ = self.store.read_assembly(reduced)
+                    self.store.write_assembly(canonical, assembly)
+        if self.process_index == self.root:
+            _write_nodespace_record(self.store, self.nodes, self.props)
+        self._seconds += time.perf_counter() - t0
+
+    def phase_merge_round(self, round_index: int) -> None:
+        """Execute my pair (if any) of reduce round ``round_index``: load
+        the partner's partial from the spill directory, merge it after
+        mine, write the result back over my partial."""
+        import time
+
+        from repro.core.serialize import merge_assemblies
+
+        t0 = time.perf_counter()
+        for dst, src in self.schedule[round_index]:
+            if self.active[dst] != self.process_index:
+                continue
+            mine, nb_dst = self.store.read_assembly(self._partial_name(self.active[dst]))
+            theirs, nb_src = self.store.read_assembly(self._partial_name(self.active[src]))
+            merged = merge_assemblies([mine, theirs])
+            out_bytes = self.store.write_assembly(
+                self._partial_name(self.active[dst]), merged
+            )
+            self.budget.note_merge(nb_dst + nb_src + out_bytes)
+        self.budget.n_merge_rounds += 1
+        self._seconds += time.perf_counter() - t0
+
+    def phase_finish(self):
+        """Load the root partial, finalize the manifest (root process
+        only), and return the :class:`~repro.core.extract.ExtractionResult`
+        — identical on every process."""
+        import time
+
+        from repro.core.extract import ExtractionResult, _graph_from_assembly
+
+        t0 = time.perf_counter()
+        merged, _ = self.store.read_assembly(self._partial_name(self.root))
+        if self.process_index == self.root:
+            self.store.finalize(meta={
+                "kind": "extraction_spill",
+                "n_shards": self.n_shards,
+                "n_rules": len(self._plans or []),
+                "mode": self.mode,
+                "preprocess": self.preprocess,
+                "final_record": self._partial_name(self.root),
+                "process_count": self.process_count,
+            })
+        graph = _graph_from_assembly(
+            self.nodes, self.props, merged, self.preprocess
+        )
+        self._seconds += time.perf_counter() - t0
+        return ExtractionResult(
+            graph=graph,
+            nodes=self.nodes,
+            plans=[p for p, _, _ in (self._plans or [])],
+            seconds=self._seconds,
+            dropped_endpoints=merged.dropped,
+            mode=self.mode,
+            n_shards=self.n_shards,
+            budget=self.budget,
+        )
+
+    def run(self):
+        """All phases with barriers between — the one-call multi-host
+        entry point; single-process it degrades to the plain spilled
+        pipeline (no barriers, full shard range)."""
+        self.phase_nodes()
+        self.barrier("spill:nodes")
+        self.phase_shards()
+        self.barrier("spill:shards")
+        for r in range(len(self.schedule)):
+            self.phase_merge_round(r)
+            self.barrier(f"spill:merge{r}")
+        return self.phase_finish()
 
 
 def specs_for_tree(axes_tree, rules: Mapping, mesh: Mesh):

@@ -1,0 +1,395 @@
+"""Out-of-core shard assembly + multi-host tree-reduce merge (DESIGN.md §8).
+
+The spill contract: with ``spill_dir=`` the sharded pipeline writes each
+shard's assembled output to an atomically-committed, byte-accounted
+record as the shard finishes, merges by log-depth tree reduce, and still
+produces a ``CondensedGraph`` *byte-identical* to the unsharded build —
+while the assembly-buffer account stays bounded by roughly one shard's
+output instead of growing with shard count.  A partial spill directory
+is rejected, never silently merged; the multi-host reduce
+(``MultihostSpillExtraction``) yields the same bytes on every process.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExtractionBudget,
+    ExtractionBudgetError,
+    ShardSpillStore,
+    SpillError,
+    extract,
+    extract_sharded,
+    graphs_identical,
+    merge_spilled_graph,
+)
+from repro.core.condensed import merge_chain_shards
+from repro.core.dsl import parse
+from repro.core.extract import (
+    _build_node_space_sharded,
+    _extract_shard,
+    _plans_info,
+    _shard_record_name,
+)
+from repro.core.serialize import (
+    SPILL_MANIFEST,
+    ShardAssembly,
+    merge_assemblies,
+    tree_merge_records,
+)
+from repro.data.synth import dblp_catalog, tpch_catalog, univ_catalog
+
+Q_DBLP = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+Q_TPCH = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+Q_UNIV = """
+Nodes(ID, Name) :- Instructor(ID, Name).
+Nodes(ID, Name) :- Student(ID, Name).
+Edges(ID1, ID2) :- TaughtCourse(ID1, courseId), TookCourse(ID2, courseId).
+"""
+
+
+@pytest.fixture(scope="module")
+def dblp():
+    # 401/701: indivisible by every tested shard count -> ragged last shard
+    return dblp_catalog(n_authors=401, n_pubs=701, mean_authors_per_pub=5.0, seed=11)
+
+
+@pytest.fixture(scope="module")
+def dblp_shards(dblp):
+    """Per-shard chains + local key spaces for direct merge-op tests."""
+    q = parse(Q_DBLP)
+    nodes, _ = _build_node_space_sharded(dblp, q.nodes_rules, 7, None)
+    info = _plans_info(dblp, q, "condensed")
+    assemblies = [_extract_shard(dblp, info, nodes, s, 7, None) for s in range(7)]
+    return assemblies
+
+
+def _assemblies_identical(a: ShardAssembly, b: ShardAssembly) -> bool:
+    if sorted(a.chains) != sorted(b.chains) or sorted(a.direct) != sorted(b.direct):
+        return False
+    if a.dropped != b.dropped:
+        return False
+    for r in a.chains:
+        ca, ka = a.chains[r]
+        cb, kb = b.chains[r]
+        if len(ca.edges) != len(cb.edges) or len(ka) != len(kb):
+            return False
+        for ea, eb in zip(ca.edges, cb.edges):
+            if (ea.n_src, ea.n_dst) != (eb.n_src, eb.n_dst):
+                return False
+            if not (np.array_equal(ea.src, eb.src) and np.array_equal(ea.dst, eb.dst)):
+                return False
+            if ea.src.dtype != eb.src.dtype:
+                return False
+        for x, y in zip(ka, kb):
+            if x.dtype != y.dtype or not np.array_equal(x, y):
+                return False
+    for r in a.direct:
+        for x, y in zip(a.direct[r], b.direct[r]):
+            if x.dtype != y.dtype or not np.array_equal(x, y):
+                return False
+    return True
+
+
+# -- spill/load round trip ----------------------------------------------------
+
+def test_spill_round_trip_byte_identical_per_shard(dblp_shards, tmp_path):
+    store = ShardSpillStore(str(tmp_path / "spill"))
+    for s, assembly in enumerate(dblp_shards):
+        written = store.write_assembly(_shard_record_name(s), assembly)
+        assert written == assembly.nbytes()
+        loaded, nbytes = store.read_assembly(_shard_record_name(s))
+        assert nbytes == written
+        assert _assemblies_identical(assembly, loaded)
+
+
+def test_spill_record_byte_accounting(tmp_path):
+    store = ShardSpillStore(str(tmp_path / "spill"))
+    arrays = {"a": np.arange(10, dtype=np.int64), "b": np.zeros(3, np.int32)}
+    written = store.write_record("rec", arrays, meta={"x": 1})
+    assert written == 10 * 8 + 3 * 4
+    got, meta, nbytes = store.read_record("rec")
+    assert nbytes == written and meta == {"x": 1}
+    assert np.array_equal(got["a"], arrays["a"])
+    assert got["b"].dtype == np.int32
+
+
+# -- tree-reduce merge parity -------------------------------------------------
+
+@pytest.mark.parametrize("arity", [2, 3])
+@pytest.mark.parametrize("n_shards", [1, 2, 7])
+def test_tree_reduce_chain_merge_matches_single_pass(dblp_shards, n_shards, arity):
+    parts = dblp_shards[:n_shards]
+    chains = [a.chains[0][0] for a in parts]
+    keys = [a.chains[0][1] for a in parts]
+    ref_c, ref_k = merge_chain_shards(chains, keys)  # PR-4 single pass
+    got_c, got_k = merge_chain_shards(chains, keys, arity=arity)
+    for ea, eb in zip(ref_c.edges, got_c.edges):
+        assert (ea.n_src, ea.n_dst) == (eb.n_src, eb.n_dst)
+        assert np.array_equal(ea.src, eb.src) and np.array_equal(ea.dst, eb.dst)
+        assert ea.src.dtype == eb.src.dtype
+    assert all(np.array_equal(a, b) for a, b in zip(ref_k, got_k))
+
+
+def test_tree_reduce_rejects_bad_arity(dblp_shards):
+    chains = [a.chains[0][0] for a in dblp_shards[:2]]
+    keys = [a.chains[0][1] for a in dblp_shards[:2]]
+    with pytest.raises(ValueError, match="arity"):
+        merge_chain_shards(chains, keys, arity=1)
+
+
+@pytest.mark.parametrize("arity", [2, 3])
+@pytest.mark.parametrize("n_shards", [1, 2, 7])
+def test_spilled_extraction_parity(dblp, tmp_path, n_shards, arity):
+    base = extract(dblp, Q_DBLP)
+    sp = str(tmp_path / f"spill{n_shards}_{arity}")
+    got = extract_sharded(
+        dblp, Q_DBLP, n_shards=n_shards, spill_dir=sp, merge_arity=arity
+    )
+    assert graphs_identical(base.graph, got.graph)
+    assert np.array_equal(base.nodes.keys, got.nodes.keys)
+    assert np.array_equal(base.nodes.type_ids, got.nodes.type_ids)
+    assert base.dropped_endpoints == got.dropped_endpoints
+    assert got.budget.spilled_bytes > 0
+    assert got.budget.n_spilled_records >= n_shards
+
+
+def test_spilled_multilayer_and_heterogeneous_parity(tmp_path):
+    """Multi-layer remap (TPCH condensed) and two Nodes rules with
+    properties (UNIV) both survive the spill round trip exactly."""
+    tcat = tpch_catalog(seed=12)
+    base = extract(tcat, Q_TPCH, mode="condensed")
+    got = extract_sharded(
+        tcat, Q_TPCH, n_shards=4, mode="condensed",
+        spill_dir=str(tmp_path / "tpch"),
+    )
+    assert base.graph.chains[0].n_layers == 3
+    assert graphs_identical(base.graph, got.graph)
+
+    ucat = univ_catalog(seed=13)
+    ubase = extract(ucat, Q_UNIV)
+    ugot = extract_sharded(
+        ucat, Q_UNIV, n_shards=5, spill_dir=str(tmp_path / "univ")
+    )
+    assert graphs_identical(ubase.graph, ugot.graph)
+    assert np.array_equal(
+        ubase.graph.node_properties["Name"], ugot.graph.node_properties["Name"]
+    )
+
+
+def test_merge_spilled_graph_rebuilds_without_catalog(dblp, tmp_path):
+    """A finalized spill directory is self-contained: the graph comes
+    back byte-identical from disk alone."""
+    sp = str(tmp_path / "spill")
+    got = extract_sharded(dblp, Q_DBLP, n_shards=7, spill_dir=sp)
+    # fast path: read the writing run's recorded final partial
+    g1, nodes1 = merge_spilled_graph(sp)
+    assert graphs_identical(got.graph, g1)
+    # full path: tree-reduce the shard records again, both arities
+    for arity in (2, 3):
+        g2, nodes2 = merge_spilled_graph(sp, merge_arity=arity, reuse_final=False)
+        assert graphs_identical(got.graph, g2)
+        assert np.array_equal(got.nodes.keys, nodes2.keys)
+        assert np.array_equal(got.nodes.type_ids, nodes2.type_ids)
+        assert got.nodes.type_names == nodes2.type_names
+
+
+# -- budget accounting over assembly buffers ----------------------------------
+
+def test_assembly_budget_raises_without_spill_and_spills_with_it(dblp, tmp_path):
+    probe_mem = extract_sharded(dblp, Q_DBLP, n_shards=7)
+    probe_sp = extract_sharded(
+        dblp, Q_DBLP, n_shards=7, spill_dir=str(tmp_path / "probe")
+    )
+    # a cap between the spilled peak and the resident accumulation:
+    # satisfiable only out of core
+    cap = (probe_sp.budget.peak_assembly_bytes + probe_mem.budget.peak_assembly_bytes) // 2
+    assert probe_sp.budget.peak_assembly_bytes < cap < probe_mem.budget.peak_assembly_bytes
+    with pytest.raises(ExtractionBudgetError, match="assembly"):
+        extract_sharded(dblp, Q_DBLP, n_shards=7, max_assembly_bytes=cap)
+    res = extract_sharded(
+        dblp, Q_DBLP, n_shards=7, max_assembly_bytes=cap,
+        spill_dir=str(tmp_path / "spill"),
+    )
+    assert graphs_identical(extract(dblp, Q_DBLP).graph, res.graph)
+    assert res.budget.peak_assembly_bytes <= cap
+    assert res.budget.resident_assembly_bytes == 0  # all released
+
+
+def test_spill_peak_bounded_by_two_shard_outputs(dblp, tmp_path):
+    """The acceptance bound: peak resident assembly state <= 2 shards'
+    outputs with spilling, vs the full accumulation without."""
+    q = parse(Q_DBLP)
+    nodes, _ = _build_node_space_sharded(dblp, q.nodes_rules, 7, None)
+    info = _plans_info(dblp, q, "auto")
+    shard_bytes = [
+        _extract_shard(dblp, info, nodes, s, 7, None).nbytes() for s in range(7)
+    ]
+    res = extract_sharded(
+        dblp, Q_DBLP, n_shards=7, spill_dir=str(tmp_path / "s")
+    )
+    assert res.budget.peak_assembly_bytes <= 2 * max(shard_bytes)
+    mem = extract_sharded(dblp, Q_DBLP, n_shards=7)
+    assert mem.budget.peak_assembly_bytes >= sum(shard_bytes)
+    assert res.budget.peak_assembly_bytes < mem.budget.peak_assembly_bytes
+
+
+def test_unsatisfiable_assembly_budget_raises_even_with_spill(dblp, tmp_path):
+    """A single shard output bigger than the cap cannot be honored by
+    spilling — it must be resident to be built."""
+    with pytest.raises(ExtractionBudgetError, match="unsatisfiable|assembly"):
+        extract_sharded(
+            dblp, Q_DBLP, n_shards=2, max_assembly_bytes=64,
+            spill_dir=str(tmp_path / "s"),
+        )
+
+
+def test_merge_residency_reported(dblp, tmp_path):
+    res = extract_sharded(dblp, Q_DBLP, n_shards=7, spill_dir=str(tmp_path / "s"))
+    assert res.budget.n_merge_rounds == 3  # ceil(log2(7)) rounds
+    assert res.budget.merge_peak_resident_bytes > 0
+    assert "spilled_bytes" in res.budget.summary()
+
+
+# -- crash safety -------------------------------------------------------------
+
+def test_partial_spill_missing_manifest_rejected(dblp, tmp_path):
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    os.remove(os.path.join(sp, SPILL_MANIFEST))
+    with pytest.raises(SpillError, match="partial"):
+        merge_spilled_graph(sp)
+
+
+def test_partial_spill_missing_record_rejected(dblp, tmp_path):
+    import shutil
+
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    shutil.rmtree(os.path.join(sp, _shard_record_name(1)))
+    with pytest.raises(SpillError, match="missing"):
+        merge_spilled_graph(sp)
+
+
+def test_partial_spill_tmp_litter_rejected(dblp, tmp_path):
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    os.makedirs(os.path.join(sp, "shard_s00099.tmp-123"))
+    with pytest.raises(SpillError, match="uncommitted"):
+        merge_spilled_graph(sp)
+
+
+def test_truncated_spill_record_rejected(dblp, tmp_path):
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    rec = os.path.join(sp, _shard_record_name(0), "record.json")
+    os.remove(rec)
+    with pytest.raises(SpillError):
+        merge_spilled_graph(sp)
+
+
+def test_truncated_payload_rejected(dblp, tmp_path):
+    """A lost/truncated .bin (e.g. power loss after the rename) is caught
+    by the size check in validate(), as SpillError — not a numpy
+    reshape crash deep in the merge."""
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    rdir = os.path.join(sp, _shard_record_name(1))
+    target = next(f for f in sorted(os.listdir(rdir)) if f.endswith(".bin"))
+    with open(os.path.join(rdir, target), "r+b") as f:
+        f.truncate(3)
+    with pytest.raises(SpillError, match="truncated"):
+        merge_spilled_graph(sp)
+
+
+def test_budget_object_not_mutated_by_spill_run(dblp, tmp_path):
+    """A caller-supplied budget reused after a spilled run still enforces
+    max_assembly_bytes on a later non-spilling run."""
+    probe = extract_sharded(dblp, Q_DBLP, n_shards=7, spill_dir=str(tmp_path / "p"))
+    cap = probe.budget.peak_assembly_bytes * 2  # fine for spilling, too
+    budget = ExtractionBudget(max_assembly_bytes=cap)
+    extract(dblp, Q_DBLP, n_shards=7, budget=budget, spill_dir=str(tmp_path / "s"))
+    assert not budget.spill_enabled  # the run did not flip the flag
+    budget2 = ExtractionBudget(max_assembly_bytes=cap)
+    with pytest.raises(ExtractionBudgetError, match="assembly"):
+        extract(dblp, Q_DBLP, n_shards=7, budget=budget2)
+
+
+def test_nonexistent_spill_dir_rejected(tmp_path):
+    with pytest.raises(SpillError, match="does not exist"):
+        ShardSpillStore.open(str(tmp_path / "nope"))
+
+
+def test_rerun_into_used_dir_invalidates_stale_manifest(dblp, tmp_path):
+    """Starting a new run into a finalized spill dir removes the old
+    closing manifest immediately — a crash mid-re-run leaves a *partial*
+    spill (rejected), never the old manifest certifying a mix of old and
+    new records."""
+    sp = str(tmp_path / "spill")
+    extract_sharded(dblp, Q_DBLP, n_shards=3, spill_dir=sp)
+    assert ShardSpillStore.open(sp)  # finalized
+    # opening for writing (what a re-run does first) drops the manifest
+    ShardSpillStore(sp)
+    with pytest.raises(SpillError, match="partial"):
+        ShardSpillStore.open(sp)
+    # a completed re-run finalizes again and is whole — including a
+    # re-run with FEWER shards: stale shard records from the old run are
+    # cleared, not certified into the new manifest
+    res = extract_sharded(dblp, Q_DBLP, n_shards=2, spill_dir=sp)
+    store = ShardSpillStore.open(sp)
+    listed = store.manifest()["records"]
+    assert _shard_record_name(2) not in listed  # old 3-shard leftover gone
+    g, _ = merge_spilled_graph(sp)
+    assert graphs_identical(res.graph, g)
+
+
+def test_committed_tmp_litter_not_listed(tmp_path):
+    """A tmp record dir whose record.json was fully written before the
+    crash must not be listed as committed (finalize would certify it)."""
+    store = ShardSpillStore(str(tmp_path / "s"))
+    store.write_record("good", {"a": np.arange(4)})
+    import shutil
+
+    shutil.copytree(
+        str(tmp_path / "s" / "good"), str(tmp_path / "s" / "bad.tmp-99")
+    )
+    assert store.list_records() == ["good"]
+
+
+# -- tree_merge_records primitives --------------------------------------------
+
+def test_tree_merge_records_matches_in_memory(dblp_shards, tmp_path):
+    store = ShardSpillStore(str(tmp_path / "s"))
+    names = []
+    for s, a in enumerate(dblp_shards):
+        names.append(_shard_record_name(s))
+        store.write_assembly(names[-1], a)
+    ref = merge_assemblies(list(dblp_shards))
+    for arity in (2, 3):
+        budget = ExtractionBudget(spill_enabled=True)
+        final, in_memory = tree_merge_records(
+            store, names, arity=arity, out_prefix=f"t{arity}_", budget=budget
+        )
+        got, _ = store.read_assembly(final)
+        assert _assemblies_identical(ref, got)
+        # the returned in-memory final equals the record just written
+        assert in_memory is not None and _assemblies_identical(ref, in_memory)
+        # leaves survive the merge (crash mid-merge loses no shard output)
+        assert all(store.has_record(n) for n in names)
+        assert budget.n_merge_rounds == {2: 3, 3: 2}[arity]
+
+
+def test_tree_merge_records_single_record_passthrough(dblp_shards, tmp_path):
+    store = ShardSpillStore(str(tmp_path / "s"))
+    store.write_assembly("only", dblp_shards[0])
+    assert tree_merge_records(store, ["only"]) == ("only", None)
+    with pytest.raises(ValueError):
+        tree_merge_records(store, [])

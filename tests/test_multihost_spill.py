@@ -1,0 +1,171 @@
+"""Multi-host tree-reduce merge over spilled shards (DESIGN.md §8).
+
+The container is single-process, so the multi-host reduce is exercised
+by *simulating* P processes: one ``MultihostSpillExtraction`` per
+simulated ``process_index`` against a shared spill directory, phases
+driven in lockstep with a no-op barrier — exactly equivalent to the real
+thing because every cross-process data dependency flows through spill
+records at a phase boundary.  Every process must end with a
+``CondensedGraph`` byte-identical to the unsharded single-host build,
+including ragged shard-to-process divisions and ``n_shards <
+n_processes`` (trailing processes own no shards and sit out the reduce).
+"""
+import numpy as np
+import pytest
+
+from repro.core import extract, graphs_identical
+from repro.data.synth import dblp_catalog, univ_catalog
+from repro.distributed.sharding import (
+    MultihostSpillExtraction,
+    extraction_shard_range,
+    merge_schedule,
+)
+
+Q_DBLP = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+Q_UNIV = """
+Nodes(ID, Name) :- Instructor(ID, Name).
+Nodes(ID, Name) :- Student(ID, Name).
+Edges(ID1, ID2) :- TaughtCourse(ID1, courseId), TookCourse(ID2, courseId).
+"""
+
+
+@pytest.fixture(scope="module")
+def dblp():
+    return dblp_catalog(n_authors=151, n_pubs=301, mean_authors_per_pub=4.0, seed=5)
+
+
+def _simulate(catalog, query, n_shards, P, spill_dir, **kw):
+    """Drive P simulated processes phase-by-phase over one spill dir."""
+    procs = [
+        MultihostSpillExtraction(
+            catalog, query, n_shards, spill_dir,
+            process_index=p, process_count=P,
+            barrier=lambda name: None, **kw,
+        )
+        for p in range(P)
+    ]
+    for m in procs:
+        m.phase_nodes()
+    for m in procs:
+        m.phase_shards()
+    for r in range(len(procs[0].schedule)):
+        for m in procs:
+            m.phase_merge_round(r)
+    return [m.phase_finish() for m in procs]
+
+
+# -- schedule / shard-range composition ---------------------------------------
+
+def test_merge_schedule_log_depth_and_coverage():
+    import math
+
+    for n in (1, 2, 3, 5, 7, 8, 13):
+        rounds = merge_schedule(n)
+        assert len(rounds) == (0 if n <= 1 else math.ceil(math.log2(n)))
+        # every non-root partial is absorbed exactly once, into a lower index
+        absorbed = [src for rnd in rounds for _, src in rnd]
+        assert sorted(absorbed) == list(range(1, n))
+        for rnd in rounds:
+            for dst, src in rnd:
+                assert dst < src
+        # and the reduce always lands at index 0
+        survivors = set(range(n)) - set(absorbed)
+        assert survivors == {0} or n == 0
+
+
+def test_merge_schedule_pairs_adjacent_ranges():
+    """Each merge must join two contiguous, adjacent accumulated shard
+    ranges — the order invariant byte-identity rests on."""
+    for n in (2, 3, 5, 8):
+        spans = {p: (p, p + 1) for p in range(n)}  # accumulated [lo, hi)
+        for rnd in merge_schedule(n):
+            for dst, src in rnd:
+                assert spans[dst][1] == spans[src][0], (n, dst, src)
+                spans[dst] = (spans[dst][0], spans[src][1])
+        assert spans[0] == (0, n)
+
+
+def test_extraction_shard_range_composes_with_premerge():
+    """Ranges are contiguous, ascending, cover every shard, and empty
+    exactly for trailing processes when n_shards < n_processes."""
+    for n_shards, procs in [(10, 4), (3, 8), (16, 1), (5, 5), (1, 6), (7, 3)]:
+        ranges = [extraction_shard_range(n_shards, p, procs) for p in range(procs)]
+        flat = [s for r in ranges for s in r]
+        assert flat == list(range(n_shards))
+        lo = 0
+        for r in ranges:
+            assert list(r) == list(range(lo, lo + len(r)))
+            lo += len(r)
+        active = [p for p, r in enumerate(ranges) if len(r)]
+        assert active == list(range(min(n_shards, procs)))
+
+
+# -- multi-host parity --------------------------------------------------------
+
+@pytest.mark.parametrize("P,n_shards", [(1, 4), (2, 7), (3, 7), (4, 2), (5, 3)])
+def test_multihost_byte_identical_on_every_process(dblp, tmp_path, P, n_shards):
+    base = extract(dblp, Q_DBLP)
+    results = _simulate(dblp, Q_DBLP, n_shards, P, str(tmp_path / "spill"))
+    assert len(results) == P
+    for res in results:
+        assert graphs_identical(base.graph, res.graph)
+        assert np.array_equal(base.nodes.keys, res.nodes.keys)
+        assert res.dropped_endpoints == base.dropped_endpoints
+        assert res.n_shards == n_shards
+
+
+def test_multihost_heterogeneous_with_props(tmp_path):
+    cat = univ_catalog(seed=13)
+    base = extract(cat, Q_UNIV)
+    results = _simulate(cat, Q_UNIV, 5, 3, str(tmp_path / "spill"))
+    for res in results:
+        assert graphs_identical(base.graph, res.graph)
+        assert np.array_equal(
+            base.graph.node_properties["Name"],
+            res.graph.node_properties["Name"],
+        )
+
+
+def test_multihost_finalized_spill_is_remergeable(dblp, tmp_path):
+    """The root process finalizes the manifest, so the directory a
+    multi-host run leaves behind is a valid merge_spilled_graph input."""
+    from repro.core import merge_spilled_graph
+
+    base = extract(dblp, Q_DBLP)
+    sp = str(tmp_path / "spill")
+    _simulate(dblp, Q_DBLP, 6, 3, sp)
+    graph, nodes = merge_spilled_graph(sp)
+    assert graphs_identical(base.graph, graph)
+
+
+def test_multihost_run_single_process_fallback(dblp, tmp_path):
+    """run() with process_count=1 (the CPU container): no barriers, full
+    shard range, same bytes."""
+    base = extract(dblp, Q_DBLP)
+    res = MultihostSpillExtraction(
+        dblp, Q_DBLP, 4, str(tmp_path / "spill"),
+        process_index=0, process_count=1,
+    ).run()
+    assert graphs_identical(base.graph, res.graph)
+    assert res.budget.spilled_bytes > 0
+
+
+def test_multihost_only_active_processes_spill_shards(dblp, tmp_path):
+    """n_shards < n_processes: trailing processes own no shard records
+    but still reconstruct the identical graph."""
+    base = extract(dblp, Q_DBLP)
+    P, n_shards = 5, 2
+    sp = str(tmp_path / "spill")
+    results = _simulate(dblp, Q_DBLP, n_shards, P, sp)
+    from repro.core import ShardSpillStore
+
+    store = ShardSpillStore(sp, create=False)
+    shard_records = [n for n in store.list_records() if n.startswith("shard_s")]
+    assert len(shard_records) == n_shards
+    partials = [n for n in store.list_records() if n.startswith("partial_p")]
+    assert len(partials) == min(P, n_shards)
+    for res in results:
+        assert graphs_identical(base.graph, res.graph)
