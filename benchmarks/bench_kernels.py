@@ -1,15 +1,20 @@
 """Kernel-level benchmark: streamed bit-packed SpMM vs XLA segment path.
 
 Wall times on CPU are *not* the deliverable (interpret mode executes the
-kernel body in Python); the numbers that matter are structural: packed
-bytes vs f32 blocks vs edge list, blocks touched (the TPU roofline terms),
-and the *dispatch* evidence — the column sweep crosses the old 8 MiB
-resident-source-column cliff and shows the streamed kernel no longer
-falls back to XLA there.
+kernel body in Python); the numbers that matter are structural AND
+honest: every cell is raced through ``measure_crossover`` — the same
+pack-time measurement the engine consults — and ``backend_auto`` is the
+decision read back from that table.  The gated invariants (scripts/
+check.sh) are (a) ``backend_auto`` NEVER picks the measured-slower
+backend in any cell, and (b) at least one real cell exists where the
+Pallas kernel beats XLA outright.  The block-dense cells supply (b) even
+under interpret mode: few slots, many edges, so the kernel does a
+handful of 128x128 MXU dots where the segment path gathers every edge.
 
-Writes ``BENCH_kernels.json`` (repo root) with the packed-vs-fallback
-cells: per-size auto-dispatch decision under the old and new formulas,
-packed and XLA step times, and the host-pack before/after
+Writes ``BENCH_kernels.json`` (repo root) with the measured cells
+(per-cell autotuned config, measured times for both backends, dispatch
+decision + honesty flag), the old-formula dispatch for the lifted 8 MiB
+cliff narrative, and the host-pack before/after
 (``np.bitwise_or.at`` scatter vs sort+``reduceat`` fold).
 """
 from __future__ import annotations
@@ -22,8 +27,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.condensed import BipartiteEdges
+from repro.kernels.autotune import batch_bucket, measure_crossover, src_bucket
 from repro.kernels.ops import PackedLayer, bitmap_spmm, resolve_backend
-from repro.kernels.pack import TILE, pack_bipartite, streamed_footprint_bytes
+from repro.kernels.pack import TILE, pack_bipartite
 
 from .common import emit, time_call
 
@@ -59,16 +65,67 @@ def _clustered_bipartite(
     return BipartiteEdges(src[idx], dst[idx], n_src, n_dst)
 
 
+def _block_dense_bipartite(n: int) -> BipartiteEdges:
+    """Fully dense n x n incidence: n^2 edges in (n/128)^2 slots — the
+    regime where bit-packed MXU dots beat the gather+segment path even
+    with the kernel interpreted on CPU."""
+    src, dst = np.meshgrid(np.arange(n), np.arange(n))
+    return BipartiteEdges(src.ravel(), dst.ravel(), n, n)
+
+
+def _measured_cell(name: str, kind: str, e: BipartiteEdges, f: int, rng) -> dict:
+    """Race one cell through the pack-time measurement and read the
+    dispatch decision back the way the engine does."""
+    itemsize = 4
+    layer = PackedLayer.from_edges(e)
+    table = measure_crossover(layer, batch_sizes=(f,))
+    entry = table.lookup("sum", layer.n_src, f)
+    backend_auto = resolve_backend(
+        "auto", f, 128, itemsize, table=table, n_src=layer.n_src
+    )
+    n_src_pad = layer.bsb.n_src_tiles * TILE
+    old_fits = _old_fits(n_src_pad, f, 128, itemsize)
+    # parity spot-check: the two backends must agree on this cell
+    x = jnp.asarray(rng.standard_normal((layer.n_src, f)).astype(np.float32))
+    y_p = np.asarray(bitmap_spmm(layer, x, backend="pallas"))
+    y_x = np.asarray(bitmap_spmm(layer, x, backend="xla"))
+    assert np.allclose(y_p, y_x, atol=1e-3), f"packed != segment path in {name}"
+    measured = entry.backend
+    return {
+        "name": name,
+        "kind": kind,
+        "n_src": int(layer.n_src),
+        "col_mib": n_src_pad * f * itemsize / 2**20,
+        "edges": int(e.n_edges),
+        "slots": int(layer.bsb.n_slots),
+        "src_bucket": src_bucket(layer.n_src),
+        "batch_bucket": batch_bucket(f),
+        "row_window": int(entry.row_window),
+        "feature_block": int(entry.feature_block),
+        "t_packed_us": entry.pallas_us,
+        "t_xla_us": entry.xla_us,
+        "measured_backend": measured,
+        "backend_auto": backend_auto,
+        "old_formula_backend": "pallas" if old_fits else "xla",
+        "dispatch_honest": backend_auto == measured,
+        "pallas_wins": measured == "pallas",
+    }
+
+
 def run(smoke: bool = False) -> list:
     rows = []
     rng = np.random.default_rng(0)
     f = 128
     itemsize = 4
 
-    # -- column sweep across the old 8 MiB resident-column cliff ---------
-    # (n_src, src tiles hit, edges per tile); col bytes = n_src_pad * 128 * 4
+    # -- measured crossover cells ----------------------------------------
+    # clustered tall columns (the old 8 MiB cliff regime, where the
+    # gather path usually wins on CPU) plus block-dense cells (where the
+    # kernel wins outright).  Non-smoke adds more sizes on both sides of
+    # the crossover.
     if smoke:
         sweep = [(1024, 4, 64), (20480, 12, 64)]          # 0.5 MiB, 10 MiB
+        dense = [256]
     else:
         sweep = [
             (8192, 24, 96),    # 4 MiB: below the old cliff
@@ -76,42 +133,29 @@ def run(smoke: bool = False) -> list:
             (20480, 24, 96),   # 10 MiB: above — old formula fell back
             (65536, 24, 96),   # 32 MiB: far above
         ]
+        dense = [256, 512]
     cells = []
     for n_src, tiles_hit, per_tile in sweep:
-        n_dst = 256
-        e = _clustered_bipartite(n_src, n_dst, tiles_hit, per_tile, rng)
-        layer = PackedLayer.from_edges(e)
-        x = jnp.asarray(rng.standard_normal((n_src, f)).astype(np.float32))
-        n_src_pad = layer.bsb.n_src_tiles * TILE
-        col_bytes = n_src_pad * f * itemsize
-        old_fits = _old_fits(n_src_pad, f, f, itemsize)
-        backend_auto = resolve_backend("auto", f, f, itemsize)
-        t_packed = time_call(lambda: bitmap_spmm(layer, x, backend="pallas"))
-        t_xla = time_call(lambda: bitmap_spmm(layer, x, backend="xla"))
-        y_p = np.asarray(bitmap_spmm(layer, x, backend="pallas"))
-        y_x = np.asarray(bitmap_spmm(layer, x, backend="xla"))
-        assert np.allclose(y_p, y_x, atol=1e-3), "packed != segment path"
+        e = _clustered_bipartite(n_src, 256, tiles_hit, per_tile, rng)
+        cells.append(_measured_cell(f"clustered_n{n_src}", "clustered", e, f, rng))
+    for n in dense:
         cells.append(
-            {
-                "n_src": int(n_src),
-                "col_mib": col_bytes / 2**20,
-                "edges": int(e.n_edges),
-                "slots": int(layer.bsb.n_slots),
-                "backend_auto": backend_auto,
-                "old_formula_backend": "pallas" if old_fits else "xla",
-                "t_packed_us": t_packed * 1e6,
-                "t_xla_us": t_xla * 1e6,
-            }
+            _measured_cell(f"block_dense_n{n}", "block_dense",
+                           _block_dense_bipartite(n), f, rng)
         )
+    for c in cells:
         rows.append(
             (
-                f"spmm_sweep_n{n_src}",
-                t_packed * 1e6,
-                f"col_mib={col_bytes / 2**20:.1f};auto={backend_auto};"
-                f"old_auto={'pallas' if old_fits else 'xla'};"
-                f"t_xla_us={t_xla * 1e6:.1f}",
+                f"spmm_{c['name']}",
+                c["t_packed_us"],
+                f"col_mib={c['col_mib']:.1f};auto={c['backend_auto']};"
+                f"measured={c['measured_backend']};"
+                f"old_auto={c['old_formula_backend']};"
+                f"rw={c['row_window']};t_xla_us={c['t_xla_us']:.1f}",
             )
         )
+    dispatch_honest = all(c["dispatch_honest"] for c in cells)
+    pallas_wins = sum(c["pallas_wins"] for c in cells)
     fallback_rate_new = sum(c["backend_auto"] != "pallas" for c in cells) / len(cells)
     fallback_rate_old = sum(
         c["old_formula_backend"] != "pallas" for c in cells
@@ -162,6 +206,8 @@ def run(smoke: bool = False) -> list:
     report = {
         "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "smoke": bool(smoke),
+        "dispatch_honest": dispatch_honest,
+        "pallas_wins": int(pallas_wins),
         "fallback_rate_old_formula": fallback_rate_old,
         "fallback_rate": fallback_rate_new,
         "cells": cells,
@@ -177,6 +223,11 @@ def run(smoke: bool = False) -> list:
     )
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
-    rows.append(("bench_kernels_json", 0.0, f"fallback_rate={fallback_rate_new}"))
+    rows.append(
+        (
+            "bench_kernels_json", 0.0,
+            f"dispatch_honest={dispatch_honest};pallas_wins={pallas_wins}",
+        )
+    )
     emit(rows)
     return rows

@@ -24,15 +24,27 @@ python -m benchmarks.run --smoke
 
 echo "== kernels perf cells (BENCH_kernels.json) =="
 # the full smoke run above already ran the kernels section and wrote the
-# artifact; only assert its cells here (no duplicate interpret-mode sweep)
+# artifact; only assert its cells here (no duplicate interpret-mode sweep).
+# Two gates: (a) auto-dispatch is HONEST — no cell where backend_auto
+# picks the measured-slower backend (the pre-crossover bug shipped a
+# 35x Pallas loss as 'auto'); (b) the kernel earns its keep — at least
+# one measured cell where Pallas beats XLA outright.
 python - <<'PY'
 import json
 with open("BENCH_kernels.json") as fh:
     r = json.load(fh)
-assert "fallback_rate" in r and "cells" in r and "pack" in r, r.keys()
-assert r["fallback_rate"] == 0.0, f"kernel fell back to XLA: {r['cells']}"
+assert "cells" in r and "pack" in r, r.keys()
+liars = [
+    c["name"] for c in r["cells"]
+    if c["backend_auto"] != c["measured_backend"]
+]
+assert not liars, f"auto picked a measured-slower backend in: {liars}"
+assert r["dispatch_honest"], "dispatch_honest flag disagrees with cells"
+wins = [c["name"] for c in r["cells"] if c["pallas_wins"]]
+assert wins, f"no cell where Pallas beats XLA: {r['cells']}"
 print(
-    f"fallback_rate={r['fallback_rate']} (old formula: "
+    f"dispatch honest over {len(r['cells'])} cells; pallas wins in "
+    f"{wins}; fallback_rate={r['fallback_rate']} (old formula: "
     f"{r['fallback_rate_old_formula']}); pack speedup "
     f"{r['pack']['speedup']:.2f}x over {r['pack']['edges']} edges"
 )

@@ -43,6 +43,7 @@ from .condensed import BipartiteEdges, CondensedGraph, ExpandedGraph
 from .semiring import PLUS_TIMES, Semiring, kernelizable, segment_reduce
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..kernels.autotune import CrossoverTable
     from .dedup import StreamedCorrection
 
 __all__ = [
@@ -50,6 +51,7 @@ __all__ = [
     "DeviceExpanded",
     "DeviceCondensed",
     "PackedOperands",
+    "FusedOperands",
     "DevicePackedLayer",
     "DevicePacked",
     "DeviceGraph",
@@ -145,18 +147,61 @@ class DeviceCondensed:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["slot_src", "slot_row", "row_start", "row_count", "bitmaps"],
-    meta_fields=[],
+    meta_fields=["crossover"],
 )
 @dataclasses.dataclass
 class PackedOperands:
     """One direction's streamed-slot kernel operands (see
-    :class:`repro.kernels.pack.BlockSparseBitmap` for the layout)."""
+    :class:`repro.kernels.pack.BlockSparseBitmap` for the layout).
+
+    ``crossover`` is the measured-crossover dispatch table recorded at
+    pack time (``to_device_packed(..., measure=True)``); it is a frozen
+    hashable value riding in the pytree *meta* (it steers trace-time
+    dispatch, so it must participate in jit static hashing).  ``None``
+    means unmeasured: 'auto' falls back to the footprint formula.
+    """
 
     slot_src: jnp.ndarray   # (n_slots,) int32
     slot_row: jnp.ndarray   # (n_slots,) int32
     row_start: jnp.ndarray  # (n_rt,) int32
     row_count: jnp.ndarray  # (n_rt,) int32
     bitmaps: jnp.ndarray    # (n_slots, TILE, WORDS) uint32
+    crossover: Optional["CrossoverTable"] = None
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "kind", "main_src", "corr_src", "main_idx", "corr_idx",
+        "slot_row", "row_start", "row_count", "bitmaps", "planes",
+    ],
+    meta_fields=["plane_weights", "n_h_pad", "n_x_pad", "n_out", "n_out_pad"],
+)
+@dataclasses.dataclass
+class FusedOperands:
+    """Operands of the fused last-layer-SpMM + DEDUP-C-epilogue kernel
+    (:func:`repro.kernels.bitmap_spmm.bitmap_spmm_fused_pallas`): the
+    interleaved main/correction slot stream built by
+    :func:`repro.kernels.correction.build_fused_stream`, the main layer's
+    bitmaps, and the correction's bit-planes.  ``n_h_pad`` / ``n_x_pad``
+    are the padded row counts of the two streamed feature operands (the
+    last hidden frontier and the original input)."""
+
+    kind: jnp.ndarray       # (n_slots,) int32 — 0 main, 1 correction
+    main_src: jnp.ndarray   # (n_slots,) int32
+    corr_src: jnp.ndarray   # (n_slots,) int32
+    main_idx: jnp.ndarray   # (n_slots,) int32
+    corr_idx: jnp.ndarray   # (n_slots,) int32
+    slot_row: jnp.ndarray   # (n_slots,) int32
+    row_start: jnp.ndarray  # (n_rt,) int32
+    row_count: jnp.ndarray  # (n_rt,) int32
+    bitmaps: jnp.ndarray    # (n_main, TILE, WORDS) uint32
+    planes: jnp.ndarray     # (n_corr, P, TILE, WORDS) uint32
+    plane_weights: Tuple[float, ...]
+    n_h_pad: int
+    n_x_pad: int
+    n_out: int
+    n_out_pad: int
 
 
 @partial(
@@ -189,7 +234,10 @@ class DevicePackedLayer:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["chains", "direct", "correction", "diag_mult"],
+    data_fields=[
+        "chains", "direct", "correction", "diag_mult",
+        "fused_fwd", "fused_rev",
+    ],
     meta_fields=["n_real", "deduplicated", "backend", "feature_block"],
 )
 @dataclasses.dataclass
@@ -201,8 +249,14 @@ class DevicePacked:
     either direction, are dispatched to :func:`repro.kernels.bitmap_spmm.
     bitmap_spmm_pallas` per layer when ``backend`` resolves to Pallas
     (DESIGN.md §6).  ``backend``: ``'pallas'`` | ``'xla'`` | ``'auto'``
-    (Pallas on TPU when the streamed working set fits VMEM — independent
-    of the source count — XLA segment-reduce otherwise).
+    (the measured-crossover table recorded at pack time when present,
+    else Pallas on TPU when the streamed working set fits VMEM — XLA
+    segment-reduce otherwise).
+
+    ``fused_fwd`` / ``fused_rev`` carry the fused last-layer +
+    DEDUP-C-epilogue operands (one per direction) when the graph has a
+    correction; ring propagation then runs the subtraction inside the
+    kernel instead of as a separate segment_sum pass.
     """
 
     chains: Tuple[Tuple[DevicePackedLayer, ...], ...]
@@ -213,6 +267,8 @@ class DevicePacked:
     deduplicated: bool
     backend: str
     feature_block: int
+    fused_fwd: Optional[FusedOperands] = None
+    fused_rev: Optional[FusedOperands] = None
 
 
 DeviceGraph = Union[DeviceExpanded, DeviceCondensed, DevicePacked]
@@ -306,42 +362,79 @@ def to_device(
     )
 
 
-def _upload_operands(bsb) -> PackedOperands:
+def _upload_operands(bsb, crossover=None) -> PackedOperands:
     return PackedOperands(
         slot_src=jnp.asarray(bsb.slot_src),
         slot_row=jnp.asarray(bsb.slot_row),
         row_start=jnp.asarray(bsb.row_start),
         row_count=jnp.asarray(bsb.row_count),
         bitmaps=jnp.asarray(bsb.bitmaps),
+        crossover=crossover,
     )
+
+
+def _measure_direction(bsb, dev_src, dev_dst, n_src, n_dst, measure_kwargs):
+    """Record a crossover table for one packed direction by racing the
+    kernel (autotuned) against the segment path on this host."""
+    from ..kernels.autotune import measure_crossover
+    from ..kernels.ops import PackedLayer
+
+    layer = PackedLayer(
+        bsb=bsb,
+        bsb_rev=None,
+        src=dev_src,
+        dst=dev_dst,
+        n_src=n_src,
+        n_dst=n_dst,
+    )
+    return measure_crossover(layer, **measure_kwargs)
 
 
 def _pack_edges(
     e: BipartiteEdges,
     dev: DeviceBipartite,
     shard_edges: Optional[int] = None,
-) -> DevicePackedLayer:
+    measure: bool = False,
+    measure_kwargs: Optional[dict] = None,
+):
     """``dev`` is the already-uploaded COO layer from :func:`to_device`,
     reused so the edge arrays cross to the device only once.  Packs both
     directions: the forward incidence and its transpose (reverse steps).
     ``shard_edges`` routes the packing through the shard-at-a-time path
     (:func:`repro.kernels.pack.pack_bipartite` slices + OR-merge,
-    DESIGN.md §7) so packing transients stay bounded for large layers."""
+    DESIGN.md §7) so packing transients stay bounded for large layers.
+    ``measure`` additionally races each direction against the segment
+    path and stores the crossover table on the uploaded operands.
+
+    Returns ``(DevicePackedLayer, fwd_bsb, rev_bsb)`` — the host-side
+    packings ride along so :func:`to_device_packed` can build the fused
+    correction stream without re-packing."""
     from ..kernels.pack import TILE, pack_bipartite
 
     fwd = rev = None
+    fwd_bsb = rev_bsb = None
     # min one tile each way, matching the pack's pad-slot convention
     # (BlockSparseBitmap.n_src_tiles): zero-node layers stay kernel-safe
     n_src_pad = max(-(-e.n_src // TILE), 1) * TILE
     n_dst_pad = max(-(-e.n_dst // TILE), 1) * TILE
     try:
-        fwd = _upload_operands(pack_bipartite(e, shard_edges=shard_edges))
-        rev = _upload_operands(
-            pack_bipartite(e.reversed(), shard_edges=shard_edges)
-        )
+        fwd_bsb = pack_bipartite(e, shard_edges=shard_edges)
+        rev_bsb = pack_bipartite(e.reversed(), shard_edges=shard_edges)
+        fwd_table = rev_table = None
+        if measure:
+            kw = measure_kwargs or {}
+            fwd_table = _measure_direction(
+                fwd_bsb, dev.src, dev.dst, e.n_src, e.n_dst, kw
+            )
+            rev_table = _measure_direction(
+                rev_bsb, dev.dst, dev.src, e.n_dst, e.n_src, kw
+            )
+        fwd = _upload_operands(fwd_bsb, fwd_table)
+        rev = _upload_operands(rev_bsb, rev_table)
     except ValueError:
         fwd = rev = None  # duplicate edges (multiplicity): COO path only
-    return DevicePackedLayer(
+        fwd_bsb = rev_bsb = None
+    layer = DevicePackedLayer(
         src=dev.src,
         dst=dev.dst,
         fwd=fwd,
@@ -351,6 +444,63 @@ def _pack_edges(
         n_src_pad=n_src_pad,
         n_dst_pad=n_dst_pad,
     )
+    return layer, fwd_bsb, rev_bsb
+
+
+def _upload_fused(stream, main_bsb, corr_planes) -> FusedOperands:
+    from ..kernels.pack import TILE
+
+    return FusedOperands(
+        kind=jnp.asarray(stream.kind),
+        main_src=jnp.asarray(stream.main_src),
+        corr_src=jnp.asarray(stream.corr_src),
+        main_idx=jnp.asarray(stream.main_idx),
+        corr_idx=jnp.asarray(stream.corr_idx),
+        slot_row=jnp.asarray(stream.slot_row),
+        row_start=jnp.asarray(stream.row_start),
+        row_count=jnp.asarray(stream.row_count),
+        bitmaps=jnp.asarray(main_bsb.bitmaps),
+        planes=jnp.asarray(corr_planes.planes),
+        plane_weights=corr_planes.plane_weights,
+        n_h_pad=main_bsb.n_src_tiles * TILE,
+        n_x_pad=corr_planes.n_src_tiles * TILE,
+        n_out=main_bsb.n_dst,
+        n_out_pad=main_bsb.n_row_tiles * TILE,
+    )
+
+
+def _build_fused(
+    graph: CondensedGraph,
+    chains_host,
+    triples: Tuple[np.ndarray, np.ndarray, np.ndarray],
+) -> Tuple[Optional[FusedOperands], Optional[FusedOperands]]:
+    """Build the fused (last layer + DEDUP-C epilogue) operands for both
+    directions.  Forward fuses into the last chain's final layer (the one
+    whose output space is the real nodes); reverse propagation walks each
+    chain backwards, so its final step is the same chain's *first* layer
+    transposed.  Requires that layer to be packable (no duplicates) —
+    returns ``(None, None)`` otherwise."""
+    from ..kernels.correction import build_fused_stream, pack_correction
+
+    cs, cd, cm = triples
+    if not graph.chains or cs.size == 0:
+        return None, None
+    _, last_fwd_bsb, _ = chains_host[-1][-1]
+    _, _, first_rev_bsb = chains_host[-1][0]
+    if last_fwd_bsb is None or first_rev_bsb is None:
+        return None, None
+    n = graph.n_real
+    if last_fwd_bsb.n_dst != n or first_rev_bsb.n_dst != n:
+        return None, None
+    corr_fwd = pack_correction(cs, cd, cm, n_src=n, n_dst=n)
+    corr_rev = pack_correction(cd, cs, cm, n_src=n, n_dst=n)
+    fused_fwd = _upload_fused(
+        build_fused_stream(last_fwd_bsb, corr_fwd), last_fwd_bsb, corr_fwd
+    )
+    fused_rev = _upload_fused(
+        build_fused_stream(first_rev_bsb, corr_rev), first_rev_bsb, corr_rev
+    )
+    return fused_fwd, fused_rev
 
 
 def to_device_packed(
@@ -361,6 +511,9 @@ def to_device_packed(
     backend: str = "auto",
     feature_block: int = 128,
     pack_shard_edges: Optional[int] = None,
+    fuse_correction: bool = True,
+    measure: bool = False,
+    measure_kwargs: Optional[dict] = None,
 ) -> DevicePacked:
     """Like :func:`to_device`, additionally packing every condensed layer
     into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
@@ -369,6 +522,16 @@ def to_device_packed(
     accepted the same way).  ``pack_shard_edges`` bounds the host packing
     transients per layer (shard-at-a-time packing, DESIGN.md §7) — the
     uploaded operands are byte-identical either way.
+
+    ``fuse_correction`` (default on) also builds the fused last-layer +
+    DEDUP-C-epilogue operands when a correction is present, so batched
+    ring propagation subtracts the correction inside the kernel.
+    ``measure=True`` races each packed direction against the segment path
+    at pack time and records the crossover table on the operands
+    (:mod:`repro.kernels.autotune`); 'auto' dispatch then follows the
+    measurement.  ``measure_kwargs`` forwards to
+    :func:`~repro.kernels.autotune.measure_crossover` (batch sizes, ops,
+    a deterministic ``time_fn`` for tests).
     """
     base = to_device(
         graph,
@@ -377,18 +540,31 @@ def to_device_packed(
         drop_self_loops=drop_self_loops,
     )
     assert isinstance(base, DeviceCondensed)
-    chains = tuple(
+    chains_host = tuple(
         tuple(
-            _pack_edges(e, d, pack_shard_edges)
+            _pack_edges(e, d, pack_shard_edges, measure, measure_kwargs)
             for e, d in zip(c.edges, dc)
         )
         for c, dc in zip(graph.chains, base.chains)
     )
+    chains = tuple(tuple(t[0] for t in c) for c in chains_host)
     direct = (
-        _pack_edges(graph.direct, base.direct, pack_shard_edges)
+        _pack_edges(
+            graph.direct, base.direct, pack_shard_edges, measure,
+            measure_kwargs,
+        )[0]
         if graph.direct is not None
         else None
     )
+    fused_fwd = fused_rev = None
+    triples = _correction_triples(correction)
+    if fuse_correction and triples is not None:
+        cs, cd, cm = triples
+        fused_fwd, fused_rev = _build_fused(
+            graph,
+            chains_host,
+            (np.asarray(cs), np.asarray(cd), np.asarray(cm)),
+        )
     return DevicePacked(
         chains=chains,
         direct=direct,
@@ -398,6 +574,8 @@ def to_device_packed(
         deduplicated=deduplicated,
         backend=backend,
         feature_block=feature_block,
+        fused_fwd=fused_fwd,
+        fused_rev=fused_rev,
     )
 
 
@@ -450,11 +628,32 @@ def _kernel_applicable(
         return False
     from ..kernels.pack import fits_vmem
 
+    n_slots = int(packed.slot_src.shape[0])
+    if packed.crossover is not None:
+        # measured decision wins over both heuristics: the table was
+        # recorded on this host, so a measured-pallas cell dispatches
+        # even off-TPU (only sanity-checked against the VMEM budget of
+        # its recorded config), and a measured-xla cell never dispatches
+        # no matter what the footprint formula says
+        n_src_dir = layer.n_dst if reverse else layer.n_src
+        entry = packed.crossover.lookup(
+            semiring.add_kind, n_src_dir, x.shape[1]
+        )
+        if entry is not None:
+            if entry.backend == "xla":
+                return False
+            return fits_vmem(
+                x.shape[1],
+                entry.feature_block,
+                x.dtype.itemsize,
+                n_slots=n_slots,
+                row_window=entry.row_window,
+            )
     fits = fits_vmem(
         x.shape[1],
         graph.feature_block,
         x.dtype.itemsize,
-        n_slots=int(packed.slot_src.shape[0]),
+        n_slots=n_slots,
     )
     return jax.default_backend() == "tpu" and fits
 
@@ -466,8 +665,14 @@ def _packed_layer_spmm(
     semiring: Semiring,
     reverse: bool,
 ) -> jnp.ndarray:
-    """One layer of the factorized SpMM ``Y = B ⊕ X`` on the Pallas kernel."""
+    """One layer of the factorized SpMM ``Y = B ⊕ X`` on the Pallas kernel.
+
+    The kernel window geometry comes from the operands' crossover table
+    when one was recorded (the measured-fastest config for this cell);
+    unmeasured packs stream the default ``(TILE, feature_block)`` window.
+    """
     from ..kernels.bitmap_spmm import bitmap_spmm_pallas
+    from ..kernels.pack import TILE
 
     global KERNEL_DISPATCH_COUNT
     KERNEL_DISPATCH_COUNT += 1
@@ -475,8 +680,18 @@ def _packed_layer_spmm(
     n_in_pad = layer.n_dst_pad if reverse else layer.n_src_pad
     n_out_pad = layer.n_src_pad if reverse else layer.n_dst_pad
     n_out = layer.n_src if reverse else layer.n_dst
+    row_window = TILE
+    if ops.crossover is not None:
+        n_src_dir = layer.n_dst if reverse else layer.n_src
+        entry = ops.crossover.lookup(semiring.add_kind, n_src_dir, x.shape[1])
+        if entry is not None and entry.backend == "pallas":
+            row_window = entry.row_window
+            feature_block = entry.feature_block
     f = x.shape[1]
     f_pad = -(-f // feature_block) * feature_block
+    # a >TILE window streams several source tiles per fetch: the source
+    # axis must pad to a whole number of windows
+    n_in_pad = -(-n_in_pad // row_window) * row_window
     xp = jnp.pad(x, ((0, n_in_pad - x.shape[0]), (0, f_pad - f)))
     yp = bitmap_spmm_pallas(
         ops.slot_src,
@@ -489,6 +704,7 @@ def _packed_layer_spmm(
         feature_block=feature_block,
         op=semiring.add_kind,
         zero=float(semiring.zero),
+        row_window=row_window,
     )
     return yp[:n_out, :f]
 
@@ -505,6 +721,79 @@ def _layer_propagate(
     ):
         return _packed_layer_spmm(edges, x, graph.feature_block, sr, reverse)
     return _edge_propagate(sr, edges, x, reverse)
+
+
+def _fused_applicable(
+    graph: "DevicePacked",
+    fused: Optional[FusedOperands],
+    x: jnp.ndarray,
+    semiring: Semiring,
+    hop_weight: Optional[float],
+) -> bool:
+    """Trace-time fused-epilogue dispatch: batched plus-times ring steps
+    only (the correction is a ring concept), no per-hop weighting (the
+    fused output folds the subtraction into one chain's hop, which only
+    commutes unweighted), and the same backend policy as the per-layer
+    kernel (explicit 'pallas' always, 'xla' never, 'auto' on TPU when the
+    fused working set — two streamed feature operands, the plane stack,
+    two accumulators — fits VMEM)."""
+    if (
+        fused is None
+        or x.ndim != 2
+        or semiring.name != "plus_times"
+        or hop_weight is not None
+    ):
+        return False
+    if graph.backend == "pallas":
+        return True
+    if graph.backend == "xla":
+        return False
+    from ..kernels.pack import fused_fits_vmem
+
+    fits = fused_fits_vmem(
+        x.shape[1],
+        graph.feature_block,
+        x.dtype.itemsize,
+        n_planes=len(fused.plane_weights),
+        n_slots=int(fused.kind.shape[0]),
+    )
+    return jax.default_backend() == "tpu" and fits
+
+
+def _fused_layer_spmm(
+    fused: FusedOperands,
+    h: jnp.ndarray,
+    x: jnp.ndarray,
+    feature_block: int,
+) -> jnp.ndarray:
+    """The last layer of the last chain with the DEDUP-C subtraction in
+    the kernel epilogue: ``y = B h − D x`` in one launch."""
+    from ..kernels.bitmap_spmm import bitmap_spmm_fused_pallas
+
+    global KERNEL_DISPATCH_COUNT
+    KERNEL_DISPATCH_COUNT += 1
+    f = h.shape[1]
+    f_pad = -(-f // feature_block) * feature_block
+    hp = jnp.pad(h, ((0, fused.n_h_pad - h.shape[0]), (0, f_pad - f)))
+    xp = jnp.pad(x, ((0, fused.n_x_pad - x.shape[0]), (0, f_pad - f)))
+    yp = bitmap_spmm_fused_pallas(
+        fused.kind,
+        fused.main_src,
+        fused.corr_src,
+        fused.main_idx,
+        fused.corr_idx,
+        fused.slot_row,
+        fused.row_start,
+        fused.row_count,
+        fused.bitmaps,
+        fused.planes,
+        hp,
+        xp,
+        n_dst_pad=fused.n_out_pad,
+        plane_weights=fused.plane_weights,
+        feature_block=feature_block,
+    )
+    return yp[: fused.n_out, :f]
 
 
 def _apply_hop(sr: Semiring, y: jnp.ndarray, hop_weight: Optional[float]) -> jnp.ndarray:
@@ -557,12 +846,24 @@ def propagate(
             "allow_duplicates=True (paper §4.1 duplication problem)"
         )
 
+    # Fused DEDUP-C epilogue (DESIGN.md §6): the last chain's final layer
+    # and the correction subtraction run as one kernel launch; the
+    # trailing segment_sum correction below is then skipped.
+    fused = None
+    if isinstance(graph, DevicePacked) and graph.correction is not None:
+        cand = graph.fused_rev if reverse else graph.fused_fwd
+        if _fused_applicable(graph, cand, x, semiring, hop_weight):
+            fused = cand
+
     y = None
-    for chain in graph.chains:
+    for ci, chain in enumerate(graph.chains):
         seq: Sequence[DeviceBipartite] = chain[::-1] if reverse else chain
         h = x
-        for e in seq:
+        fuse_here = fused is not None and ci == len(graph.chains) - 1
+        for e in seq[:-1] if fuse_here else seq:
             h = _layer_propagate(graph, semiring, e, h, reverse)
+        if fuse_here:
+            h = _fused_layer_spmm(fused, h, x, graph.feature_block)
         h = _apply_hop(semiring, h, hop_weight)
         y = h if y is None else semiring.add(y, h)
     if graph.direct is not None:
@@ -575,7 +876,9 @@ def propagate(
 
     if semiring.name == "plus_times":
         # Exactness corrections only make sense in the ring.
-        if graph.correction is not None:
+        if graph.correction is not None and fused is not None:
+            pass  # already subtracted inside the fused kernel epilogue
+        elif graph.correction is not None:
             cs, cd, cm = graph.correction
             src, dst = (cd, cs) if reverse else (cs, cd)
             corr = jax.ops.segment_sum(

@@ -38,6 +38,8 @@ from .condensed import BipartiteEdges, Chain, CondensedGraph, merge_chain_shards
 __all__ = [
     "save_condensed",
     "load_condensed",
+    "save_crossover_table",
+    "load_crossover_table",
     "export_edge_list",
     "SpillError",
     "ShardSpillStore",
@@ -110,6 +112,30 @@ def save_condensed(graph: CondensedGraph, directory: str) -> str:
         shutil.rmtree(directory)
     os.rename(tmp, directory)
     return directory
+
+
+def save_crossover_table(table, path: str) -> str:
+    """Persist a measured-crossover dispatch table
+    (:class:`repro.kernels.autotune.CrossoverTable`) next to the pack it
+    was recorded for — same atomic-rename discipline as the graph
+    manifests, so a reloaded pack replays the exact dispatch decisions
+    that were measured (golden-tested: tests/test_crossover_golden.py).
+    Returns ``path``."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(table.to_json())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_crossover_table(path: str):
+    """Load a table written by :func:`save_crossover_table`."""
+    from ..kernels.autotune import CrossoverTable
+
+    with open(path) as f:
+        return CrossoverTable.from_json(f.read())
 
 
 def load_condensed(directory: str) -> CondensedGraph:

@@ -1,8 +1,20 @@
 """Pallas TPU kernels for the paper's compute hot-spot: condensed-layer
 SpMM.  ``bitmap_spmm.py`` (pl.pallas_call + BlockSpec VMEM tiling, the
-BITMAP representation reborn as bit-packed block-sparse MXU operands),
-``ops.py`` (jit wrappers + XLA fallback), ``ref.py`` (pure-jnp oracles),
-``pack.py`` (host-side packing)."""
+BITMAP representation reborn as bit-packed block-sparse MXU operands,
+plus the fused DEDUP-C-epilogue variant), ``ops.py`` (jit wrappers + XLA
+fallback), ``ref.py`` (pure-jnp oracles), ``pack.py`` (host-side
+packing), ``correction.py`` (bit-plane correction packing + fused-stream
+assembly), ``autotune.py`` (config sweep + measured-crossover dispatch
+table)."""
+from .autotune import (
+    CANDIDATES,
+    DEFAULT_CONFIG,
+    CrossoverEntry,
+    CrossoverTable,
+    KernelConfig,
+    autotune_spmm,
+    measure_crossover,
+)
 from .ops import (
     PackedLayer,
     bitmap_spmm,
@@ -17,4 +29,11 @@ __all__ = [
     "condensed_two_hop",
     "pack_layer",
     "resolve_backend",
+    "KernelConfig",
+    "DEFAULT_CONFIG",
+    "CANDIDATES",
+    "CrossoverEntry",
+    "CrossoverTable",
+    "autotune_spmm",
+    "measure_crossover",
 ]

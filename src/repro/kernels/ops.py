@@ -5,12 +5,16 @@
 
 Backend selection: ``backend='pallas'`` uses the bit-packed streamed MXU
 kernel (compiled on TPU, interpret mode elsewhere); ``'xla'`` uses the
-gather/segment-reduce path; ``'auto'`` picks pallas whenever the kernel's
-*streamed* working set fits VMEM (:func:`repro.kernels.pack.fits_vmem`) —
-since the source column is streamed, this no longer depends on the source
-count, so arbitrarily tall source columns dispatch to the kernel.
-``reverse=True`` propagates along transposed edges using the reverse
-packing carried by :class:`PackedLayer`.
+gather/segment-reduce path; ``'auto'`` consults the measured-crossover
+table recorded at pack time (:mod:`repro.kernels.autotune`) when the
+layer carries one — the backend the measurement says is faster wins —
+and otherwise falls back to the footprint formula: pallas whenever the
+kernel's *streamed* working set fits VMEM
+(:func:`repro.kernels.pack.fits_vmem`) — since the source column is
+streamed, this no longer depends on the source count, so arbitrarily
+tall source columns dispatch to the kernel.  ``reverse=True`` propagates
+along transposed edges using the reverse packing carried by
+:class:`PackedLayer`.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import jax.numpy as jnp
 
 from ..core.condensed import BipartiteEdges
 from ..core.semiring import PLUS_TIMES, Semiring, kernelizable
+from .autotune import DEFAULT_CONFIG, CrossoverTable, KernelConfig
 from .bitmap_spmm import bitmap_spmm_pallas
 from .pack import TILE, BlockSparseBitmap, fits_vmem, pack_bipartite
 from .ref import segment_semiring_ref
@@ -41,6 +46,9 @@ class PackedLayer:
     ``bsb`` is the dst-major forward packing (``y = B @ x``); ``bsb_rev``
     packs the transposed incidence so ``reverse=True`` (HITS, out-degrees)
     dispatches to the kernel too instead of being segment-only.
+    ``crossover`` is the optional measured-crossover table recorded at
+    pack time (``from_edges(..., measure=True)``); when present, 'auto'
+    dispatch follows the measurement instead of the footprint formula.
     """
 
     bsb: BlockSparseBitmap
@@ -49,12 +57,18 @@ class PackedLayer:
     dst: jnp.ndarray
     n_src: int
     n_dst: int
+    crossover: Optional[CrossoverTable] = None
 
     @classmethod
     def from_edges(
-        cls, edges: BipartiteEdges, with_reverse: bool = True
+        cls,
+        edges: BipartiteEdges,
+        with_reverse: bool = True,
+        measure: bool = False,
+        measure_batch_sizes: "tuple[int, ...]" = (128,),
+        measure_ops: "tuple[str, ...]" = ("sum",),
     ) -> "PackedLayer":
-        return cls(
+        layer = cls(
             bsb=pack_bipartite(edges),
             bsb_rev=pack_bipartite(edges.reversed()) if with_reverse else None,
             src=jnp.asarray(edges.src, dtype=jnp.int32),
@@ -62,6 +76,13 @@ class PackedLayer:
             n_src=edges.n_src,
             n_dst=edges.n_dst,
         )
+        if measure:
+            from .autotune import measure_crossover
+
+            layer.crossover = measure_crossover(
+                layer, ops=measure_ops, batch_sizes=measure_batch_sizes
+            )
+        return layer
 
 
 def pack_layer(edges: BipartiteEdges) -> PackedLayer:
@@ -76,16 +97,40 @@ def resolve_backend(
     semiring: Semiring = PLUS_TIMES,
     packable: bool = True,
     n_slots: Optional[int] = None,
+    table: Optional[CrossoverTable] = None,
+    n_src: Optional[int] = None,
 ) -> str:
-    """The one 'auto' resolution both dispatch sites agree on: pallas when
-    the layer is packed, the semiring is kernelizable, and the streamed
-    working set fits VMEM (plus the SMEM slot tables, when ``n_slots`` is
-    known); xla otherwise.  Exposed so tests and benchmarks can assert
-    no-fallback without running the kernel."""
+    """The one 'auto' resolution both dispatch sites agree on.
+
+    Precedence: (1) a measured crossover entry, when a ``table`` recorded
+    at pack time covers this (op, n_src, B) cell — 'auto' never selects a
+    backend the measurement says is slower, and a measured-pallas win is
+    still sanity-checked against the VMEM/SMEM budget of its recorded
+    config; (2) the footprint formula — pallas when the layer is packed,
+    the semiring is kernelizable, and the streamed working set fits VMEM
+    (plus the SMEM slot tables, when ``n_slots`` is known); xla
+    otherwise.  Exposed so tests and benchmarks can assert dispatch
+    honesty without running the kernel."""
     if backend != "auto":
         return backend
     if not packable or not kernelizable(semiring):
         return "xla"
+    if table is not None and n_src is not None:
+        entry = table.lookup(semiring.add_kind, n_src, n_features)
+        if entry is not None:
+            if entry.backend == "xla":
+                return "xla"
+            return (
+                "pallas"
+                if fits_vmem(
+                    n_features,
+                    entry.feature_block,
+                    itemsize,
+                    n_slots=n_slots,
+                    row_window=entry.row_window,
+                )
+                else "xla"
+            )
     return (
         "pallas"
         if fits_vmem(n_features, feature_block, itemsize, n_slots=n_slots)
@@ -101,13 +146,17 @@ def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
 def _pallas_spmm(
     bsb: BlockSparseBitmap,
     x: jnp.ndarray,
-    feature_block: int,
+    config: KernelConfig,
     semiring: Semiring,
     interpret: Optional[bool],
 ) -> jnp.ndarray:
     f = x.shape[1]
-    f_pad = -(-f // feature_block) * feature_block
-    n_src_pad = bsb.n_src_tiles * TILE
+    f_pad = -(-f // config.feature_block) * config.feature_block
+    # pad the source axis to a whole number of streamed windows (a
+    # row_window > TILE config fetches several source tiles per step)
+    n_src_pad = (
+        -(-(bsb.n_src_tiles * TILE) // config.row_window) * config.row_window
+    )
     n_dst_pad = bsb.n_row_tiles * TILE
     xp = _pad_to(x, n_src_pad, f_pad)
     yp = bitmap_spmm_pallas(
@@ -118,10 +167,11 @@ def _pallas_spmm(
         jnp.asarray(bsb.bitmaps),
         xp,
         n_dst_pad=n_dst_pad,
-        feature_block=feature_block,
+        feature_block=config.feature_block,
         op=semiring.add_kind,
         zero=float(semiring.zero),
         interpret=interpret,
+        row_window=config.row_window,
     )
     return yp[: bsb.n_dst, :f]
 
@@ -134,17 +184,25 @@ def bitmap_spmm(
     interpret: Optional[bool] = None,
     semiring: Semiring = PLUS_TIMES,
     reverse: bool = False,
+    config: Optional[KernelConfig] = None,
 ) -> jnp.ndarray:
     """y[dst] = ⊕ over edges of x[src]; x may be (n_src,) or (n_src, F).
 
     ``reverse=True`` flips the edge direction (x indexed by dst, output
     over src) using the transposed packing.  ``semiring`` selects the
     ⊕-reduction; idempotent min/max run the masked-select kernel variant.
+    ``config`` pins the kernel window geometry; left None, the layer's
+    crossover table supplies the measured-fastest config for this cell
+    (``feature_block`` is the legacy single-axis override and still wins
+    when no table/config is present).
     """
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
     bsb = layer.bsb_rev if reverse else layer.bsb
+    # n_src of the dispatched direction = the source count the kernel
+    # actually streams over (layer.n_dst when reversed)
+    n_src_dir = layer.n_dst if reverse else layer.n_src
     backend = resolve_backend(
         backend,
         x.shape[1],
@@ -153,6 +211,8 @@ def bitmap_spmm(
         semiring=semiring,
         packable=bsb is not None,
         n_slots=bsb.n_slots if bsb is not None else None,
+        table=layer.crossover,
+        n_src=n_src_dir,
     )
     if backend == "xla":
         src, dst = (layer.dst, layer.src) if reverse else (layer.src, layer.dst)
@@ -166,7 +226,14 @@ def bitmap_spmm(
                 if reverse
                 else "layer has no packing"
             )
-        y = _pallas_spmm(bsb, x, feature_block, semiring, interpret)
+        if config is None:
+            if layer.crossover is not None:
+                config = layer.crossover.config_for(
+                    semiring.add_kind, n_src_dir, x.shape[1]
+                )
+            else:
+                config = KernelConfig(feature_block=feature_block)
+        y = _pallas_spmm(bsb, x, config, semiring, interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return y[:, 0] if squeeze else y

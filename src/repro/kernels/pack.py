@@ -66,34 +66,40 @@ __all__ = [
     "merge_block_sparse",
     "streamed_footprint_bytes",
     "fits_vmem",
+    "fused_fits_vmem",
     "TILE",
     "WORDS",
 ]
 
 
 def streamed_footprint_bytes(
-    n_features: int, feature_block: int, itemsize: int
+    n_features: int, feature_block: int, itemsize: int, row_window: int = TILE
 ) -> int:
     """Per-grid-cell VMEM working set of the streamed kernel, in bytes.
 
     The source column is *streamed* through a double-buffered window of
-    one (TILE, feature_block) tile, so — unlike the old resident-column
-    formula — the footprint is independent of ``n_src``: window (x2
-    buffers) + bitmap slot (x2) + output tile (x2) + f32 accumulator.
-    ``n_features`` is accepted (both dispatchers know it) but intentionally
-    unused: streaming removed the source-count *and* feature-count terms —
-    only the ``feature_block`` tile width matters.
+    one (row_window, feature_block) tile, so — unlike the old
+    resident-column formula — the footprint is independent of ``n_src``:
+    window (x2 buffers) + bitmap slot (x2) + output tile (x2) + f32
+    accumulator.  ``n_features`` is accepted (both dispatchers know it)
+    but intentionally unused: streaming removed the source-count *and*
+    feature-count terms — only the window dimensions matter.
+    ``row_window`` is the autotune axis (DESIGN.md §6): source rows
+    fetched per streamed step, a multiple of ``TILE``.
     """
     del n_features  # the streamed window is one feature_block tile wide
-    x_tile = TILE * feature_block * itemsize
+    x_tile = row_window * feature_block * itemsize
     bitmap_slot = TILE * WORDS * 4
     out_tile = TILE * feature_block * itemsize
     acc = TILE * feature_block * 4
     # kernel-body intermediates, whichever op variant is larger: the
     # unpacked dense 0/1 mask (sum) vs the (TILE, CHUNK, Fb) f32 select
     # of the min/max path — without these the formula re-grows a cliff
-    # at wide feature blocks
+    # at wide feature blocks; a >TILE row window also materializes one
+    # (TILE, Fb) sub-tile slice of the fetched window
     body = max(TILE * TILE * 4, TILE * STREAM_CHUNK * feature_block * 4)
+    if row_window > TILE:
+        body += TILE * feature_block * itemsize
     return _STREAM_WINDOW * (x_tile + bitmap_slot + out_tile) + acc + body
 
 
@@ -102,6 +108,7 @@ def fits_vmem(
     feature_block: int,
     itemsize: int,
     n_slots: Optional[int] = None,
+    row_window: int = TILE,
 ) -> bool:
     """Whether the streamed kernel's working set fits the VMEM budget —
     the one fits formula both auto-dispatchers must agree on.  With the
@@ -110,14 +117,42 @@ def fits_vmem(
     to the kernel.  ``n_slots`` (when the caller knows it) guards the one
     remaining size-dependent operand: the scalar-prefetched slot/run
     tables, which live in SMEM — four int32 tables bounded by ``n_slots``
-    entries each.
+    entries each.  ``row_window`` sizes the streamed source window of the
+    candidate kernel configuration (autotune sweep, DESIGN.md §6).
     """
     if n_slots is not None and 4 * n_slots * 4 > _SMEM_BUDGET:
         return False
     return (
-        streamed_footprint_bytes(n_features, feature_block, itemsize)
+        streamed_footprint_bytes(
+            n_features, feature_block, itemsize, row_window=row_window
+        )
         <= _VMEM_BUDGET
     )
+
+
+def fused_fits_vmem(
+    n_features: int,
+    feature_block: int,
+    itemsize: int,
+    n_planes: int,
+    n_slots: Optional[int] = None,
+) -> bool:
+    """VMEM/SMEM admission for the fused DEDUP-C-epilogue kernel.
+
+    On top of the plain streamed footprint it double-buffers a *second*
+    feature operand (the original input frontier next to the hidden one)
+    and the ``n_planes``-deep correction bitmap stack, and holds a second
+    f32 accumulator; its slot stream carries eight scalar tables instead
+    of four.
+    """
+    if n_slots is not None and 8 * n_slots * 4 > _SMEM_BUDGET:
+        return False
+    base = streamed_footprint_bytes(n_features, feature_block, itemsize)
+    extra = _STREAM_WINDOW * (
+        TILE * feature_block * itemsize + n_planes * TILE * WORDS * 4
+    )
+    extra += TILE * feature_block * 4  # second accumulator
+    return base + extra <= _VMEM_BUDGET
 
 
 @dataclasses.dataclass

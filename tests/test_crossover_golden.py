@@ -1,0 +1,134 @@
+"""Seeded golden regressions for the measured-crossover table.
+
+Mirrors tests/test_dedup_golden.py: a fixed-seed layer measured with a
+deterministic injected timer must always produce the SAME table — same
+keys, same winning configs, same backend decisions — and the table must
+survive a JSON round-trip (and the serialize.py save/load helpers)
+byte-for-byte, with ``resolve_backend`` reading identical decisions from
+the original and the reloaded copy.  A change in any of these values is
+a dispatch-policy regression (or an intentional policy change) — it
+should fail loudly here instead of silently re-routing SpMM traffic.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from conftest import random_bipartite
+
+from repro.core.semiring import MIN_PLUS, PLUS_TIMES
+from repro.core.serialize import load_crossover_table, save_crossover_table
+from repro.kernels.autotune import CrossoverTable, measure_crossover
+from repro.kernels.ops import PackedLayer, resolve_backend
+
+# Deterministic 'measurements': 5 candidate timings then one XLA timing
+# per cell, in seconds.  Chosen to exercise every selection rule once:
+# widest-window win, an XLA win, a tie broken by (row_window,
+# feature_block), and a pallas-on-equal tie.
+_SCRIPTED_TIMES = [
+    5.0, 4.0, 3.0, 2.0, 1.0,   # (sum, B=8)  autotune -> rw512 wins
+    10.0,                      #             xla      -> pallas cell
+    1.0, 2.0, 3.0, 4.0, 5.0,   # (sum, B=64) autotune -> rw128/fb128 wins
+    0.5,                       #             xla      -> xla cell
+    3.0, 1.0, 4.0, 1.0, 5.0,   # (min, B=8)  tie -> smaller (rw, fb) wins
+    9.0,                       #             xla      -> pallas cell
+    2.0, 2.0, 2.0, 2.0, 2.0,   # (min, B=64) all tie -> rw128/fb128
+    2.0,                       #             xla tie  -> pallas (<=)
+]
+
+# Golden decisions for the scripted run above.  Layer n_src=300 ->
+# src_bucket 9; batch buckets: 8 -> 3, 64 -> 6.
+GOLDEN_CELLS = {
+    # key: (backend, row_window, feature_block, pallas_us, xla_us)
+    ("sum", 9, 3): ("pallas", 512, 128, 1.0e6, 10.0e6),
+    ("sum", 9, 6): ("xla", 128, 128, 1.0e6, 0.5e6),
+    ("min", 9, 3): ("pallas", 128, 256, 1.0e6, 9.0e6),
+    ("min", 9, 6): ("pallas", 128, 128, 2.0e6, 2.0e6),
+}
+
+
+def _seeded_layer():
+    rng = np.random.default_rng(21)
+    return PackedLayer.from_edges(random_bipartite(300, 200, 1200, rng))
+
+
+def _scripted_table():
+    times = iter(_SCRIPTED_TIMES)
+    return measure_crossover(
+        _seeded_layer(),
+        ops=("sum", "min"),
+        batch_sizes=(8, 64),
+        time_fn=lambda fn: next(times),
+    )
+
+
+def test_scripted_measurement_reproduces_golden_table():
+    table = _scripted_table()
+    assert len(table) == len(GOLDEN_CELLS)
+    for key, entry in table.entries:
+        backend, rw, fb, p_us, x_us = GOLDEN_CELLS[key]
+        assert entry.backend == backend, key
+        assert (entry.row_window, entry.feature_block) == (rw, fb), key
+        assert (entry.pallas_us, entry.xla_us) == (p_us, x_us), key
+
+
+def test_scripted_measurement_is_deterministic():
+    a, b = _scripted_table(), _scripted_table()
+    assert a == b
+    assert a.to_json() == b.to_json()
+
+
+def test_json_round_trip_is_stable():
+    table = _scripted_table()
+    text = table.to_json()
+    again = CrossoverTable.from_json(text)
+    assert again == table
+    # round-tripping the round-trip changes nothing (canonical encoding)
+    assert again.to_json() == text
+
+
+def test_serialize_save_load_round_trip(tmp_path):
+    table = _scripted_table()
+    path = str(tmp_path / "crossover.json")
+    save_crossover_table(table, path)
+    loaded = load_crossover_table(path)
+    assert loaded == table
+    assert loaded.to_json() == table.to_json()
+
+
+def test_resolve_backend_decisions_survive_reload(tmp_path):
+    table = _scripted_table()
+    path = str(tmp_path / "crossover.json")
+    save_crossover_table(table, path)
+    loaded = load_crossover_table(path)
+    # probe measured buckets AND nearest-bucket fallbacks, both semirings
+    probes = [
+        (PLUS_TIMES, 300, 8), (PLUS_TIMES, 300, 64),
+        (PLUS_TIMES, 300, 200), (PLUS_TIMES, 40_000, 64),
+        (MIN_PLUS, 300, 8), (MIN_PLUS, 300, 64), (MIN_PLUS, 7, 1),
+    ]
+    for semiring, n_src, b in probes:
+        before = resolve_backend(
+            "auto", b, 128, 4, semiring=semiring, table=table, n_src=n_src
+        )
+        after = resolve_backend(
+            "auto", b, 128, 4, semiring=semiring, table=loaded, n_src=n_src
+        )
+        assert before == after, (semiring.name, n_src, b)
+
+
+def test_golden_resolved_backends():
+    table = _scripted_table()
+    assert resolve_backend(
+        "auto", 8, 128, 4, table=table, n_src=300
+    ) == "pallas"
+    assert resolve_backend(
+        "auto", 64, 128, 4, table=table, n_src=300
+    ) == "xla"
+    assert resolve_backend(
+        "auto", 8, 128, 4, semiring=MIN_PLUS, table=table, n_src=300
+    ) == "pallas"
+    # the (sum, B=64) xla verdict generalises to nearby unmeasured sizes
+    assert resolve_backend(
+        "auto", 64, 128, 4, table=table, n_src=290
+    ) == "xla"

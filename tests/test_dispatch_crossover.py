@@ -1,0 +1,203 @@
+"""Measured-crossover dispatch honesty.
+
+The bug this PR fixes: BENCH_kernels.json showed ``backend_auto``
+routing the 20480-source smoke cell to Pallas at a measured 35x loss
+(61.2 ms vs 1.7 ms) because dispatch trusted the VMEM footprint formula
+alone.  These tests pin the fix at every dispatch site: given a recorded
+crossover table, 'auto' NEVER selects a backend the table says is slower
+— not in ``ops.resolve_backend``, not in ``ops.bitmap_spmm``, not in
+``engine._kernel_applicable`` — and without a table the footprint
+fallback behaves exactly as before.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from conftest import random_bipartite, random_membership_graph
+
+from repro.core import dedup, engine
+from repro.core.semiring import MIN_PLUS, PLUS_TIMES, segment_reduce
+from repro.kernels.autotune import (
+    CrossoverEntry,
+    CrossoverTable,
+    measure_crossover,
+)
+from repro.kernels.ops import PackedLayer, resolve_backend
+
+
+def _table(cells):
+    return CrossoverTable.from_entries(
+        {k: CrossoverEntry(*v) for k, v in cells.items()}
+    )
+
+
+# The recorded smoke cells from the bench that exposed the bug: Pallas
+# measured 35x slower on the large cell, slightly slower on the small one.
+BENCH_BUG_TABLE = _table(
+    {
+        ("sum", 10, 6): (103.0, 57.0),          # n_src=1024, B=64
+        ("sum", 15, 6): (61159.0, 1739.0),      # n_src=20480, B=64
+    }
+)
+
+
+def test_auto_never_selects_measured_slower_backend():
+    # every recorded cell: 'auto' must resolve to the measured winner
+    for (op, sb, bb), entry in BENCH_BUG_TABLE.entries:
+        n_src, b = 2**sb, 2**bb
+        resolved = resolve_backend(
+            "auto", b, 128, 4, table=BENCH_BUG_TABLE, n_src=n_src
+        )
+        assert resolved == entry.backend, (op, sb, bb)
+        assert resolved == "xla"  # both bug cells were Pallas losses
+
+
+def test_footprint_would_have_picked_pallas():
+    # the regression scenario: without the table the footprint formula
+    # still routes the 35x-loss cell to the kernel — the table must win
+    assert resolve_backend("auto", 64, 128, 4) == "pallas"
+    assert (
+        resolve_backend(
+            "auto", 64, 128, 4, table=BENCH_BUG_TABLE, n_src=20480
+        )
+        == "xla"
+    )
+
+
+def test_measured_pallas_win_dispatches_even_when_unfashionable():
+    table = _table({("sum", 15, 6): (120.0, 900.0)})
+    assert (
+        resolve_backend("auto", 64, 128, 4, table=table, n_src=20480)
+        == "pallas"
+    )
+
+
+def test_measured_win_still_respects_vmem_budget():
+    # a measured-pallas entry whose recorded config no longer fits the
+    # budget must not dispatch blindly
+    table = _table({("sum", 12, 6): (10.0, 900.0, 128 * 4096, 128)})
+    assert (
+        resolve_backend("auto", 64, 128, 4, table=table, n_src=4096) == "xla"
+    )
+
+
+def test_nearest_bucket_fallback_is_deterministic():
+    table = BENCH_BUG_TABLE
+    # unmeasured sizes snap to the nearest measured bucket, same answer
+    # every time and from both ends
+    for n_src in (3000, 300_000):
+        a = [table.decide("sum", n_src, 64) for _ in range(3)]
+        assert a == [a[0]] * 3
+    # op never measured -> no opinion (footprint fallback)
+    assert table.decide("min", 20480, 64) is None
+    assert resolve_backend(
+        "auto", 64, 128, 4, semiring=MIN_PLUS, table=table, n_src=20480
+    ) == "pallas"
+
+
+def test_explicit_backends_ignore_table():
+    assert resolve_backend(
+        "pallas", 64, 128, 4, table=BENCH_BUG_TABLE, n_src=20480
+    ) == "pallas"
+    assert resolve_backend(
+        "xla", 64, 128, 4, table=_table({("sum", 5, 6): (1.0, 9.0)}), n_src=32
+    ) == "xla"
+
+
+def test_layer_carries_table_through_bitmap_spmm():
+    rng = np.random.default_rng(0)
+    layer = PackedLayer.from_edges(random_bipartite(300, 200, 1200, rng))
+    x = jnp.asarray(rng.integers(0, 5, (300, 16)).astype(np.float32))
+    want = np.asarray(
+        segment_reduce(PLUS_TIMES, x[np.asarray(layer.src)], layer.dst, 200)
+    )
+    # measured-xla: auto must produce the segment result (and not crash
+    # even if the packing were somehow broken for pallas)
+    layer.crossover = _table({("sum", 9, 4): (999.0, 1.0)})
+    from repro.kernels.ops import bitmap_spmm
+
+    got = np.asarray(bitmap_spmm(layer, x, backend="auto"))
+    assert np.array_equal(got, want)
+    # measured-pallas: auto dispatches the kernel off-TPU too; results agree
+    layer.crossover = _table({("sum", 9, 4): (1.0, 999.0)})
+    got_k = np.asarray(bitmap_spmm(layer, x, backend="auto"))
+    assert np.array_equal(got_k, want)
+
+
+def _packed_graph(seed=0, **kwargs):
+    rng = np.random.default_rng(seed)
+    g = random_membership_graph(150, 30, 5, rng)
+    corr = dedup.build_correction(g)
+    return g, engine.to_device_packed(g, correction=corr, **kwargs)
+
+
+def _inject_table(packed, table):
+    chains = tuple(
+        tuple(
+            dataclasses.replace(
+                layer,
+                fwd=dataclasses.replace(layer.fwd, crossover=table),
+                rev=dataclasses.replace(layer.rev, crossover=table),
+            )
+            for layer in chain
+        )
+        for chain in packed.chains
+    )
+    return dataclasses.replace(packed, chains=chains, fused_fwd=None,
+                               fused_rev=None)
+
+
+def test_engine_auto_honors_measured_table():
+    _, packed = _packed_graph(backend="auto")
+    x = jnp.asarray(
+        np.random.default_rng(1).integers(0, 5, (150, 8)).astype(np.float32)
+    )
+    slow = _inject_table(
+        packed, _table({("sum", 8, 3): (5000.0, 10.0)})
+    )
+    engine.reset_kernel_dispatch_count()
+    engine.propagate(slow, x, PLUS_TIMES)
+    assert engine.KERNEL_DISPATCH_COUNT == 0  # measured-xla: never Pallas
+    fast = _inject_table(
+        packed, _table({("sum", 8, 3): (10.0, 5000.0)})
+    )
+    engine.reset_kernel_dispatch_count()
+    engine.propagate(fast, x, PLUS_TIMES)
+    assert engine.KERNEL_DISPATCH_COUNT > 0  # measured-pallas: kernel, off-TPU
+
+
+def test_engine_measured_results_match_unmeasured():
+    g, packed = _packed_graph(backend="auto")
+    x = jnp.asarray(
+        np.random.default_rng(1).integers(0, 5, (150, 8)).astype(np.float32)
+    )
+    fast = _inject_table(packed, _table({("sum", 8, 3): (10.0, 5000.0)}))
+    corr = dedup.build_correction(g)
+    want = np.asarray(
+        engine.propagate(engine.to_device(g, correction=corr), x, PLUS_TIMES)
+    )
+    got = np.asarray(engine.propagate(fast, x, PLUS_TIMES))
+    assert np.array_equal(got, want)
+
+
+def test_measure_crossover_records_argmin_decisions():
+    rng = np.random.default_rng(2)
+    layer = PackedLayer.from_edges(random_bipartite(260, 180, 900, rng))
+    ticks = iter(range(1, 1000))
+    table = measure_crossover(
+        layer,
+        batch_sizes=(8, 64),
+        time_fn=lambda fn: float(next(ticks)),
+    )
+    assert len(table) == 2
+    for (op, sb, bb), entry in table.entries:
+        assert entry.backend == (
+            "pallas" if entry.pallas_us <= entry.xla_us else "xla"
+        )
+        # the decision a dispatcher reads back equals the recorded winner
+        n_src, b = 2**sb, 2**bb
+        assert table.decide(op, n_src, b) == entry.backend

@@ -1,0 +1,155 @@
+"""Exact-parity sweep over every autotune candidate configuration.
+
+No kernel configuration may be selectable by the autotuner/crossover
+table without a parity test exercising its shape class here: every
+``CANDIDATES`` entry runs against the segment-sum oracle in exact f32
+(integer-valued operands make every sum exact, so ``np.array_equal`` —
+not allclose — across row-window × feature-tile × batch-tile shapes,
+ragged last tiles, ``B ∈ {1, 32, 200}``, reverse dispatch, and the
+idempotent min/max semiring variants.  Also pins the autotuner's
+selection mechanics (viability filtering, deterministic tie-break) with
+an injected timer.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from conftest import random_bipartite
+
+from repro.core.semiring import MAX_TIMES, MIN_PLUS, PLUS_TIMES
+from repro.kernels.autotune import (
+    CANDIDATES,
+    DEFAULT_CONFIG,
+    KernelConfig,
+    autotune_spmm,
+    batch_bucket,
+    src_bucket,
+)
+from repro.kernels.ops import PackedLayer, bitmap_spmm
+from repro.kernels.pack import TILE, fits_vmem
+from repro.kernels.ref import segment_semiring_ref
+
+
+def _layer(n_src, n_dst, n_edges, seed):
+    rng = np.random.default_rng(seed)
+    return PackedLayer.from_edges(random_bipartite(n_src, n_dst, n_edges, rng))
+
+
+def _int_frontier(n, b, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 7, (n, b)).astype(np.float32))
+
+
+# Shape classes: ragged last tiles on both axes; the tall one spans more
+# than one 512-row window, so every candidate exercises a ragged final
+# window too.
+SHAPES = [
+    (300, 200, 1500),   # ragged src/dst tiles
+    (513, 130, 2600),   # > one max row window, ragged everywhere
+]
+
+
+def _cfg_id(cfg):
+    return f"rw{cfg.row_window}_fb{cfg.feature_block}"
+
+
+@pytest.mark.parametrize("config", CANDIDATES, ids=_cfg_id)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: f"{s[0]}x{s[1]}")
+@pytest.mark.parametrize("batch", [1, 32, 200])
+def test_candidate_parity_sum(config, shape, batch):
+    n_src, n_dst, n_edges = shape
+    layer = _layer(n_src, n_dst, n_edges, seed=7)
+    x = _int_frontier(n_src, batch, seed=batch)
+    got = bitmap_spmm(layer, x, backend="pallas", config=config)
+    want = segment_semiring_ref(layer.src, layer.dst, x, n_dst)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("config", CANDIDATES, ids=_cfg_id)
+@pytest.mark.parametrize(
+    "semiring", [MIN_PLUS, MAX_TIMES], ids=lambda s: s.name
+)
+def test_candidate_parity_idempotent(config, semiring):
+    n_src, n_dst, n_edges = SHAPES[0]
+    layer = _layer(n_src, n_dst, n_edges, seed=9)
+    x = _int_frontier(n_src, 32, seed=5)
+    got = bitmap_spmm(
+        layer, x, backend="pallas", config=config, semiring=semiring
+    )
+    want = segment_semiring_ref(
+        layer.src, layer.dst, x, n_dst, semiring=semiring
+    )
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("config", CANDIDATES, ids=_cfg_id)
+def test_candidate_parity_reverse(config):
+    n_src, n_dst, n_edges = SHAPES[0]
+    layer = _layer(n_src, n_dst, n_edges, seed=3)
+    x = _int_frontier(n_dst, 32, seed=1)
+    got = bitmap_spmm(layer, x, backend="pallas", config=config, reverse=True)
+    want = segment_semiring_ref(layer.dst, layer.src, x, n_src)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_every_candidate_admissible_at_f32():
+    # a candidate the footprint formula rejects at the default width
+    # could never be selected — it would be dead weight in the sweep
+    for cfg in CANDIDATES:
+        assert fits_vmem(
+            128, cfg.feature_block, 4, row_window=cfg.row_window
+        ), cfg
+
+
+def test_kernel_config_validation():
+    with pytest.raises(ValueError):
+        KernelConfig(row_window=100)
+    with pytest.raises(ValueError):
+        KernelConfig(row_window=0)
+    with pytest.raises(ValueError):
+        KernelConfig(feature_block=0)
+    assert KernelConfig() == DEFAULT_CONFIG
+
+
+def test_buckets_are_log2():
+    assert src_bucket(1) == 0
+    assert src_bucket(128) == 7
+    assert src_bucket(129) == 8
+    assert batch_bucket(200) == 8
+    assert src_bucket(2**14) == 14
+
+
+def test_autotune_picks_fastest_viable_deterministically():
+    layer = _layer(300, 200, 1500, seed=7)
+    # injected timer: favor the widest window; ties impossible
+    costs = {cfg: float(i + 1) for i, cfg in enumerate(CANDIDATES)}
+    fake_calls = []
+
+    def fake_time(fn):
+        fake_calls.append(fn)
+        return costs[CANDIDATES[len(fake_calls) - 1]]
+
+    best, timings = autotune_spmm(layer, 32, time_fn=fake_time)
+    assert best == CANDIDATES[0]
+    assert set(timings) == set(CANDIDATES)
+    # reversed cost order flips the winner — selection is measurement-
+    # driven, not position-driven
+    fake_calls.clear()
+
+    def fake_time_rev(fn):
+        fake_calls.append(fn)
+        return float(len(CANDIDATES) - len(fake_calls) + 1)
+
+    best_rev, _ = autotune_spmm(layer, 32, time_fn=fake_time_rev)
+    assert best_rev == CANDIDATES[-1]
+
+
+def test_autotune_skips_unviable_candidates():
+    layer = _layer(300, 200, 1500, seed=7)
+    huge = KernelConfig(row_window=TILE * 1024, feature_block=128)
+    best, timings = autotune_spmm(
+        layer, 32, candidates=(huge,), time_fn=lambda fn: 1.0
+    )
+    assert huge not in timings and best == DEFAULT_CONFIG

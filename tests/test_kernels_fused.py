@@ -1,0 +1,230 @@
+"""Fused DEDUP-C epilogue correctness.
+
+The fused kernel (last-layer SpMM with the correction subtraction in the
+epilogue) must be *byte-identical* to the existing two-pass path (SpMM
+then segment_sum subtract) — integer-valued f32 frontiers make every sum
+exact, so equality is bitwise, not approximate.  Pinned on the DBLP and
+TPCH extraction fixtures (the paper's running examples), at the kernel
+level against a dense oracle, and property-style over random condensed
+graphs (hypothesis under the tier2 marker, with seeded offline variants
+via the conftest stub, like tests/test_properties.py).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_membership_graph
+
+from repro.core import dedup, engine, extract
+from repro.core.semiring import PLUS_TIMES
+from repro.data.synth import dblp_catalog, tpch_catalog
+from repro.kernels.correction import build_fused_stream, pack_correction
+from repro.kernels.pack import TILE, pack_bipartite
+from repro.kernels.bitmap_spmm import bitmap_spmm_fused_pallas
+from test_properties import random_condensed
+
+Q1 = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+
+Q2 = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+
+
+def _int_frontier(n, b, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 7, (n, b)).astype(np.float32))
+
+
+def _check_fused_byte_identical(g, batch=16, seed=0):
+    """Fused vs two-pass vs plain segment path, both directions."""
+    corr = dedup.build_correction(g)
+    if corr[0].size == 0:
+        pytest.skip("graph has an empty correction")
+    fused = engine.to_device_packed(g, correction=corr, backend="pallas")
+    two_pass = engine.to_device_packed(
+        g, correction=corr, backend="pallas", fuse_correction=False
+    )
+    segment = engine.to_device(g, correction=corr)
+    assert fused.fused_fwd is not None and fused.fused_rev is not None
+    x = _int_frontier(g.n_real, batch, seed)
+    for reverse in (False, True):
+        engine.reset_kernel_dispatch_count()
+        got = np.asarray(
+            engine.propagate(fused, x, PLUS_TIMES, reverse=reverse)
+        )
+        assert engine.KERNEL_DISPATCH_COUNT > 0
+        ref2 = np.asarray(
+            engine.propagate(two_pass, x, PLUS_TIMES, reverse=reverse)
+        )
+        ref0 = np.asarray(
+            engine.propagate(segment, x, PLUS_TIMES, reverse=reverse)
+        )
+        assert np.array_equal(got, ref2), f"reverse={reverse} vs two-pass"
+        assert np.array_equal(got, ref0), f"reverse={reverse} vs segment"
+
+
+# ---------------------------------------------------------------------------
+# Extraction fixtures: the paper's running examples
+# ---------------------------------------------------------------------------
+
+def test_fused_byte_identical_dblp():
+    cat = dblp_catalog(n_authors=400, n_pubs=700, mean_authors_per_pub=6.0,
+                       seed=1)
+    g = extract(cat, Q1, mode="condensed").graph
+    _check_fused_byte_identical(g, batch=16, seed=1)
+
+
+def test_fused_byte_identical_tpch_multilayer():
+    cat = tpch_catalog(seed=2)
+    g = extract(cat, Q2, mode="condensed").graph
+    assert g.chains[0].n_layers == 3  # fused step is the LAST of 4 hops
+    _check_fused_byte_identical(g, batch=8, seed=2)
+
+
+def test_fused_byte_identical_membership():
+    rng = np.random.default_rng(11)
+    g = random_membership_graph(200, 40, 6, rng)
+    _check_fused_byte_identical(g, batch=33, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level parity against a dense oracle
+# ---------------------------------------------------------------------------
+
+def test_fused_kernel_matches_dense_oracle():
+    rng = np.random.default_rng(5)
+    n_virtual, n_real = 260, 300
+    key = rng.choice(n_virtual * n_real, size=2000, replace=False)
+    src, dst = key % n_virtual, key // n_virtual
+    from repro.core.condensed import BipartiteEdges
+
+    main = pack_bipartite(BipartiteEdges(src, dst, n_virtual, n_real))
+    ck = rng.choice(n_real * n_real, size=400, replace=False)
+    cs, cd = ck % n_real, ck // n_real
+    cm = rng.integers(1, 6, cs.size)
+    corr = pack_correction(cs, cd, cm, n_real, n_real)
+    assert corr.n_planes == 3  # counts up to 5 need three bit-planes
+    stream = build_fused_stream(main, corr)
+
+    f = 40
+    h = rng.integers(0, 7, (n_virtual, f)).astype(np.float32)
+    x = rng.integers(0, 7, (n_real, f)).astype(np.float32)
+    B = main.to_dense()[:n_real, :n_virtual]
+    D = corr.to_dense()[:n_real, :n_real]
+    want = B @ h - D @ x
+
+    hp = np.zeros((main.n_src_tiles * TILE, 128), np.float32)
+    hp[:n_virtual, :f] = h
+    xp = np.zeros((corr.n_src_tiles * TILE, 128), np.float32)
+    xp[:n_real, :f] = x
+    y = bitmap_spmm_fused_pallas(
+        jnp.asarray(stream.kind), jnp.asarray(stream.main_src),
+        jnp.asarray(stream.corr_src), jnp.asarray(stream.main_idx),
+        jnp.asarray(stream.corr_idx), jnp.asarray(stream.slot_row),
+        jnp.asarray(stream.row_start), jnp.asarray(stream.row_count),
+        jnp.asarray(main.bitmaps), jnp.asarray(corr.planes),
+        jnp.asarray(hp), jnp.asarray(xp),
+        n_dst_pad=main.n_row_tiles * TILE,
+        plane_weights=corr.plane_weights,
+    )
+    got = np.asarray(y)[:n_real, :f]
+    assert np.array_equal(got, want.astype(np.float32))
+
+
+def test_pack_correction_bit_planes_reconstruct_counts():
+    rng = np.random.default_rng(8)
+    n = 200
+    ck = rng.choice(n * n, size=300, replace=False)
+    cs, cd = ck % n, ck // n
+    cm = rng.integers(1, 9, cs.size)
+    corr = pack_correction(cs, cd, cm, n, n)
+    D = np.zeros((n, n))
+    D[cd, cs] = cm
+    assert np.array_equal(corr.to_dense()[:n, :n], D)
+    # no pad slots: every slot holds at least one bit
+    assert corr.n_slots == 0 or corr.planes.any(axis=(1, 2, 3)).all()
+
+
+def test_pack_correction_rejects_non_integer_counts():
+    with pytest.raises(ValueError):
+        pack_correction(
+            np.array([0]), np.array([1]), np.array([0.5]), 4, 4
+        )
+    with pytest.raises(ValueError):
+        pack_correction(np.array([0]), np.array([1]), np.array([0]), 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Fallback semantics: fusion must quietly stand down where it cannot
+# preserve the two-pass contract
+# ---------------------------------------------------------------------------
+
+def test_fused_disabled_for_hop_weight_and_1d():
+    rng = np.random.default_rng(4)
+    g = random_membership_graph(120, 25, 5, rng)
+    corr = dedup.build_correction(g)
+    fused = engine.to_device_packed(g, correction=corr, backend="pallas")
+    segment = engine.to_device(g, correction=corr)
+    x2 = _int_frontier(g.n_real, 4, seed=9)
+    # hop_weight: fused path stands down, results still agree (two-pass)
+    a = np.asarray(engine.propagate(fused, x2, PLUS_TIMES, hop_weight=2.0))
+    b = np.asarray(engine.propagate(segment, x2, PLUS_TIMES, hop_weight=2.0))
+    assert np.array_equal(a, b)
+    # 1-D frontier: fused path requires a batch axis
+    v = np.asarray(engine.propagate(fused, x2[:, 0], PLUS_TIMES))
+    w = np.asarray(engine.propagate(segment, x2[:, 0], PLUS_TIMES))
+    assert np.array_equal(v, w)
+
+
+def test_fused_ops_absent_without_correction_or_when_disabled():
+    rng = np.random.default_rng(6)
+    g = random_membership_graph(100, 20, 5, rng)
+    corr = dedup.build_correction(g)
+    assert engine.to_device_packed(g).fused_fwd is None
+    assert (
+        engine.to_device_packed(
+            g, correction=corr, fuse_correction=False
+        ).fused_fwd
+        is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property test over random condensed graphs (tier2 + offline variants)
+# ---------------------------------------------------------------------------
+
+def _check_fused_property(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    g = random_condensed(rng)
+    corr = dedup.build_correction(g)
+    fused = engine.to_device_packed(g, correction=corr, backend="pallas")
+    segment = engine.to_device(g, correction=corr)
+    x = _int_frontier(g.n_real, int(rng.integers(1, 9)), seed)
+    for reverse in (False, True):
+        got = np.asarray(
+            engine.propagate(fused, x, PLUS_TIMES, reverse=reverse)
+        )
+        want = np.asarray(
+            engine.propagate(segment, x, PLUS_TIMES, reverse=reverse)
+        )
+        assert np.array_equal(got, want), f"seed={seed} reverse={reverse}"
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None)
+def test_fused_propagation_matches_two_pass(seed):
+    _check_fused_property(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_fused_propagation_matches_two_pass_offline(seed):
+    _check_fused_property(seed)
