@@ -1,0 +1,181 @@
+"""Incremental extraction benchmark: delta apply vs full re-extract.
+
+The DESIGN.md §9 claim measured end to end on the DBLP fixture: after a
+small batch of row inserts/deletes, ``LiveGraph.apply_delta`` must beat
+a from-scratch ``extract`` of the mutated catalog — while producing the
+*byte-identical* graph (asserted here, not assumed; a fast wrong answer
+fails the run).  Two delta shapes bound the win:
+
+* ``edge_table`` — insert-only writes to ``AuthorPub``: the append-only
+  fast path binds and assembles just the insert tail and merges it
+  behind the cached entry — O(delta), not O(table).
+* ``node_props`` — delete-then-reinsert of an existing Author key (a
+  property update): the node space is rebuilt but the key->id mapping
+  comes back identical, so every cached rule entry is reused verbatim.
+
+A third, *ungated* shape (``node_table_structural``) inserts new Author
+keys: the id mapping shifts, every chain must re-assemble against the
+new node space, and the apply is honestly ~1x a full extract — reported
+for scale, not gated on.
+
+Both sides run ``mode="condensed"`` — the representation the paper (and
+this repo's serving stack) extracts into.
+
+Also times WAL recovery (``LiveGraph.replay`` over a ``DeltaLog``) and
+asserts the replayed graph equals the live one.  Writes
+``BENCH_delta.json`` (repo root); scripts/check.sh gates on byte
+identity and ``delta_us < full_us`` for every scenario.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (
+    DeltaLog,
+    LiveGraph,
+    extract,
+    graphs_identical,
+    mutate_catalog,
+)
+from repro.data.synth import dblp_catalog
+
+from .common import emit
+
+Q_DBLP = (
+    "Nodes(ID, Name) :- Author(ID, Name).\n"
+    "Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID)."
+)
+
+
+def _deltas(n_authors: int):
+    """(name, inserts, deletes, gated) per scenario.  Gated scenarios
+    must beat the full re-extract; the structural node write is reported
+    but not gated (see module docstring)."""
+    return [
+        (
+            "edge_table",
+            {"AuthorPub": {
+                "aid": np.arange(16, dtype=np.int64),
+                "pid": np.full(16, 1_000_001, dtype=np.int64),
+            }},
+            None,
+            True,
+        ),
+        (
+            "node_props",
+            {"Author": {
+                "aid": np.array([7], dtype=np.int64),
+                "name": np.array(["author_7_renamed"]),
+            }},
+            {"Author": ("aid", np.array([7], dtype=np.int64))},
+            True,
+        ),
+        (
+            "node_table_structural",
+            {"Author": {
+                "aid": np.array([n_authors, n_authors + 1], dtype=np.int64),
+                "name": np.array([f"author_{n_authors}", f"author_{n_authors + 1}"]),
+            }},
+            None,
+            False,
+        ),
+    ]
+
+
+def run(smoke: bool = False):
+    n_authors, n_pubs = (4_000, 8_000) if smoke else (8_000, 16_000)
+    cat = dblp_catalog(
+        n_authors=n_authors, n_pubs=n_pubs, mean_authors_per_pub=4.0, seed=0
+    )
+    rows = []
+
+    # warm the code paths on a toy catalog so the first timed apply is
+    # not also the process's first parse/bind/assemble call
+    warm = dblp_catalog(n_authors=50, n_pubs=100, mean_authors_per_pub=2.0,
+                        seed=1)
+    wlive = LiveGraph(warm, Q_DBLP, mode="condensed")
+    for _, ins, dels, _ in _deltas(50):
+        wlive.apply_delta(inserts=ins, deletes=dels)
+    extract(warm, Q_DBLP, mode="condensed")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        log = DeltaLog(os.path.join(tmp, "log"))
+        t0 = time.perf_counter()
+        live = LiveGraph(cat, Q_DBLP, mode="condensed", log=log)
+        base_s = time.perf_counter() - t0
+        rows.append(
+            ("delta_base_build", base_s * 1e6,
+             f"authors={n_authors};pubs={n_pubs}")
+        )
+
+        mutated = cat
+        scenarios = []
+        informational = []
+        for name, ins, dels, gated in _deltas(n_authors):
+            # one-shot wall time: apply_delta advances live state, so the
+            # measurement is a single cold call (the deployment shape)
+            t0 = time.perf_counter()
+            g, version = live.apply_delta(inserts=ins, deletes=dels)
+            delta_s = time.perf_counter() - t0
+            mutated = mutate_catalog(mutated, inserts=ins, deletes=dels)
+            t0 = time.perf_counter()
+            ref = extract(mutated, Q_DBLP, mode="condensed")
+            full_s = time.perf_counter() - t0
+            identical = graphs_identical(g, ref.graph)
+            (scenarios if gated else informational).append({
+                "name": name,
+                "version": int(version),
+                "delta_us": delta_s * 1e6,
+                "full_extract_us": full_s * 1e6,
+                "speedup": full_s / max(delta_s, 1e-12),
+                "byte_identical": bool(identical),
+            })
+            rows.append(
+                (f"delta_apply_{name}", delta_s * 1e6,
+                 f"full_us={full_s * 1e6:.0f};"
+                 f"speedup={full_s / max(delta_s, 1e-12):.2f}x;"
+                 f"identical={identical}")
+            )
+            assert identical, f"delta scenario {name} diverged from extract"
+
+        # crash recovery: base catalog + certified log -> current graph
+        reopened = DeltaLog.open(os.path.join(tmp, "log"))
+        t0 = time.perf_counter()
+        replayed = LiveGraph.replay(cat, Q_DBLP, reopened, mode="condensed")
+        replay_s = time.perf_counter() - t0
+        replay_identical = graphs_identical(replayed.graph, live.graph)
+        rows.append(
+            ("delta_log_replay", replay_s * 1e6,
+             f"entries={len(reopened)};identical={replay_identical}")
+        )
+        assert replay_identical, "log replay diverged from the live graph"
+
+    report = {
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": bool(smoke),
+        "n_authors": n_authors,
+        "n_pubs": n_pubs,
+        "base_build_us": base_s * 1e6,
+        "scenarios": scenarios,
+        "informational": informational,
+        "replay_us": replay_s * 1e6,
+        "replay_entries": len(reopened),
+        "replay_byte_identical": bool(replay_identical),
+        "byte_identical": all(
+            s["byte_identical"] for s in scenarios + informational
+        ),
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_delta.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows.append(
+        ("bench_delta_json", 0.0,
+         f"scenarios={len(scenarios)};byte_identical={report['byte_identical']}")
+    )
+    emit(rows)
+    return rows

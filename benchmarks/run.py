@@ -27,6 +27,7 @@ SECTIONS = [
     ("large", "Table 3: large datasets"),
     ("distributed", "Table 4: distributed analytics"),
     ("kernels", "kernel structural benchmark"),
+    ("delta", "incremental extraction: delta apply vs full re-extract"),
 ]
 
 

@@ -50,4 +50,33 @@ print(
 )
 PY
 
+echo "== incremental extraction (BENCH_delta.json) =="
+# the smoke run above already ran the delta section and wrote the
+# artifact; assert its claims here.  Three gates: (a) every scenario —
+# gated or informational — produced a graph byte-identical to a fresh
+# extract of the mutated catalog; (b) WAL replay reproduced the live
+# graph byte-for-byte; (c) every gated scenario's apply_delta beat the
+# full re-extract outright (a delta path that loses to a rebuild is a
+# regression, not a feature).
+python - <<'PY'
+import json
+with open("BENCH_delta.json") as fh:
+    r = json.load(fh)
+assert r["scenarios"], "no gated delta scenarios ran"
+assert r["byte_identical"], "a delta scenario diverged from extract"
+assert r["replay_byte_identical"], "WAL replay diverged from live graph"
+assert r["replay_entries"] >= 1, "replay exercised an empty log"
+losers = [
+    s["name"] for s in r["scenarios"]
+    if not s["delta_us"] < s["full_extract_us"]
+]
+assert not losers, f"delta apply lost to full re-extract in: {losers}"
+print(
+    "byte-identical over "
+    f"{len(r['scenarios']) + len(r['informational'])} scenarios + replay "
+    f"of {r['replay_entries']} entries; speedups: "
+    + ", ".join(f"{s['name']}={s['speedup']:.2f}x" for s in r["scenarios"])
+)
+PY
+
 echo "== all gates passed =="

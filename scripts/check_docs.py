@@ -40,8 +40,13 @@ REQUIRED_SECTIONS = {
         "### Measured-crossover dispatch",
         "## §7 ",
         "## §8 ",
+        "## §9 ",
     ],
-    "README.md": ["## Larger-than-memory extraction", "### Out-of-core assembly"],
+    "README.md": [
+        "## Larger-than-memory extraction",
+        "### Out-of-core assembly",
+        "## Graphs that stay fresh",
+    ],
 }
 
 # Tokens that are prose, math, or shell notation rather than symbol

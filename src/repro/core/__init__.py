@@ -23,7 +23,9 @@ from .extract import (
 from .planner import ExtractionBudget, ExtractionBudgetError
 from .relational import Catalog, ShardedTable, Table
 from .advisor import recommend
+from .delta import GraphVersion, LiveGraph, apply_delta, mutate_catalog
 from .serialize import (
+    DeltaLog,
     ShardAssembly,
     ShardSpillStore,
     SpillError,
@@ -52,6 +54,11 @@ __all__ = [
     "graphs_identical",
     "merge_spilled_graph",
     "recommend",
+    "GraphVersion",
+    "LiveGraph",
+    "apply_delta",
+    "mutate_catalog",
+    "DeltaLog",
     "save_condensed",
     "load_condensed",
     "export_edge_list",

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from .condensed import CondensedGraph
+from .condensed import CondensedGraph, ExpansionAccounting
 
 __all__ = ["Recommendation", "recommend"]
 
@@ -29,6 +29,10 @@ class Recommendation:
     reason: str
     expansion_ratio: float
     duplication_ratio: float
+    # evidence for the expansion sweep the ratios came from: chunk/run
+    # residency under the caller's budget (None only if stats were
+    # injected some other way)
+    expansion_accounting: Optional[ExpansionAccounting] = None
 
 
 def recommend(
@@ -36,25 +40,41 @@ def recommend(
     workload: str = "multi_pass",          # 'point' | 'single_pass' | 'multi_pass' | 'repeated'
     duplicate_sensitive: bool = True,
     expand_margin: float = 1.2,
+    budget_triples: Optional[int] = None,
+    chunk_rows: Optional[int] = None,
 ) -> Recommendation:
+    """Recommend host/device representations for ``graph``.
+
+    The sizing stats are measured with one budgeted
+    :meth:`~repro.core.condensed.CondensedGraph.expansion_stats` sweep
+    (previously two unbudgeted full expansions — an advisor call could
+    blow the memory wall it exists to warn about).  ``budget_triples``
+    bounds that sweep's resident triples; the
+    :class:`~repro.core.condensed.ExpansionAccounting` evidence rides on
+    ``Recommendation.expansion_accounting``.
+    """
     cond = max(graph.n_edges_condensed, 1)
-    exp_edges = graph.n_edges_expanded()
+    acct = ExpansionAccounting(budget_triples=budget_triples)
+    exp_edges, dup = graph.expansion_stats(
+        chunk_rows=chunk_rows,
+        budget_triples=budget_triples,
+        accounting=acct,
+    )
     ratio = exp_edges / cond
-    dup = graph.duplication_ratio()
 
     if ratio <= expand_margin:
         return Recommendation(
             "EXP", "EXP",
             f"expansion grows edges only {ratio:.2f}x (<= {expand_margin}); "
             "paper §6.5 suggests expanding outright",
-            ratio, dup,
+            ratio, dup, acct,
         )
     if not duplicate_sensitive or workload == "point":
         return Recommendation(
             "C-DUP", "C-DUP",
             "duplicate-insensitive or point workload: operate on C-DUP "
             "directly (paper §4.1/§6.5)",
-            ratio, dup,
+            ratio, dup, acct,
         )
     if workload == "repeated":
         rep = "DEDUP-2" if graph.is_single_layer() else "DEDUP-1"
@@ -62,11 +82,11 @@ def recommend(
             rep, "DEDUP-C",
             "repeated analyses amortize one-time dedup rewriting "
             "(paper §6.5); device engine uses the vectorized correction",
-            ratio, dup,
+            ratio, dup, acct,
         )
     return Recommendation(
         "BITMAP-2", "DEDUP-C",
         "multi-pass duplicate-sensitive analytics: BITMAP-2 on host "
         "iterators; correction-SpMV on device (DESIGN.md §2)",
-        ratio, dup,
+        ratio, dup, acct,
     )

@@ -808,6 +808,28 @@ class CondensedGraph:
         _, _, m = self.multiplicities(chunk_rows=chunk_rows)
         return float(m.mean()) if m.size else 1.0
 
+    def expansion_stats(
+        self,
+        chunk_rows: Optional[int] = None,
+        budget_triples: Optional[int] = None,
+        accounting: Optional[ExpansionAccounting] = None,
+    ) -> Tuple[int, float]:
+        """``(n_edges_expanded, duplication_ratio)`` in one budgeted pass.
+
+        :meth:`n_edges_expanded` and :meth:`duplication_ratio` each run a
+        full expansion sweep; callers that need both (the representation
+        advisor) should take this instead — one sweep, and it accepts the
+        same ``budget_triples`` / ``accounting`` plumbing as
+        :meth:`multiplicities` so the sweep is bounded and auditable.
+        """
+        s, _, m = self.multiplicities(
+            chunk_rows=chunk_rows,
+            budget_triples=budget_triples,
+            accounting=accounting,
+        )
+        dup = float(m.mean()) if m.size else 1.0
+        return int(s.size), dup
+
     # -- preprocessing (paper §4.2 step 6) -------------------------------------
     def preprocess(self, expand_threshold: Optional[float] = None) -> "CondensedGraph":
         """Expand virtual nodes whose expansion does not grow the graph.

@@ -66,10 +66,19 @@ __all__ = [
 # and reported by benchmarks).  Incremented per layer step at dispatch.
 KERNEL_DISPATCH_COUNT = 0
 
+# Trace-time evidence of fused-epilogue stand-downs: every time a ring
+# propagation over a corrected DevicePacked considers the fused DEDUP-C
+# path and declines, the machine-readable reason from
+# :func:`_fused_applicable` is counted here (dispatch-honesty tests pin
+# these instead of guessing from timings).  Reset together with the
+# dispatch count.
+KERNEL_STANDDOWN_COUNT: dict = {}
+
 
 def reset_kernel_dispatch_count() -> None:
     global KERNEL_DISPATCH_COUNT
     KERNEL_DISPATCH_COUNT = 0
+    KERNEL_STANDDOWN_COUNT.clear()
 
 # A DEDUP-C correction as the engine accepts it: the plain (src, dst,
 # count) triples from build_correction, or the StreamedCorrection wrapper
@@ -105,22 +114,30 @@ class DeviceBipartite:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["src", "dst", "weight"],
-    meta_fields=["n"],
+    meta_fields=["n", "graph_version"],
 )
 @dataclasses.dataclass
 class DeviceExpanded:
-    """EXP: unique edges with multiplicity weights (1 after dedup)."""
+    """EXP: unique edges with multiplicity weights (1 after dedup).
+
+    ``graph_version`` is the :class:`repro.core.delta.GraphVersion` of
+    the extraction this upload came from (DESIGN.md §9).  It rides in the
+    pytree *meta*, so it participates in jit static hashing: any compiled
+    executable and donated/cached operand is keyed on it, and a version
+    bump invalidates them all by construction.
+    """
 
     src: jnp.ndarray
     dst: jnp.ndarray
     weight: jnp.ndarray  # float multiplicities; all-ones when deduplicated
     n: int
+    graph_version: int = 0
 
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["chains", "direct", "correction", "diag_mult"],
-    meta_fields=["n_real", "deduplicated"],
+    meta_fields=["n_real", "deduplicated", "graph_version"],
 )
 @dataclasses.dataclass
 class DeviceCondensed:
@@ -134,6 +151,9 @@ class DeviceCondensed:
                     propagation so self-loops never contribute).
     ``deduplicated``True when path multiplicity is structurally 1
                     (DEDUP-1 output), so ring propagation is exact as-is.
+    ``graph_version`` source graph's delta version (DESIGN.md §9); static
+                    pytree meta, so a bump invalidates every compiled
+                    executable / cached operand keyed on this graph.
     """
 
     chains: Tuple[Tuple[DeviceBipartite, ...], ...]
@@ -142,6 +162,7 @@ class DeviceCondensed:
     diag_mult: Optional[jnp.ndarray]
     n_real: int
     deduplicated: bool
+    graph_version: int = 0
 
 
 @partial(
@@ -238,7 +259,10 @@ class DevicePackedLayer:
         "chains", "direct", "correction", "diag_mult",
         "fused_fwd", "fused_rev",
     ],
-    meta_fields=["n_real", "deduplicated", "backend", "feature_block"],
+    meta_fields=[
+        "n_real", "deduplicated", "backend", "feature_block",
+        "graph_version", "fused_standdown",
+    ],
 )
 @dataclasses.dataclass
 class DevicePacked:
@@ -256,7 +280,17 @@ class DevicePacked:
     ``fused_fwd`` / ``fused_rev`` carry the fused last-layer +
     DEDUP-C-epilogue operands (one per direction) when the graph has a
     correction; ring propagation then runs the subtraction inside the
-    kernel instead of as a separate segment_sum pass.
+    kernel instead of as a separate segment_sum pass.  When they could
+    *not* be built, ``fused_standdown`` records the machine-readable
+    pack-time reason (``''`` when built; e.g. ``'unpackable_last_layer'``
+    — see :func:`_build_fused`), so dispatch-honesty tests pin why a
+    graph stood down instead of guessing.  Further trace-time stand-downs
+    (1-D frontier, non-ring semiring, ``hop_weight``) are counted per
+    reason in :data:`KERNEL_STANDDOWN_COUNT`.
+
+    ``graph_version`` is the source graph's delta version (DESIGN.md §9):
+    static pytree meta, so a version bump invalidates every compiled
+    executable and cached packed operand keyed on this graph.
     """
 
     chains: Tuple[Tuple[DevicePackedLayer, ...], ...]
@@ -269,6 +303,8 @@ class DevicePacked:
     feature_block: int
     fused_fwd: Optional[FusedOperands] = None
     fused_rev: Optional[FusedOperands] = None
+    graph_version: int = 0
+    fused_standdown: str = ""
 
 
 DeviceGraph = Union[DeviceExpanded, DeviceCondensed, DevicePacked]
@@ -315,6 +351,7 @@ def to_device(
     correction: Optional[Correction] = None,
     deduplicated: bool = False,
     drop_self_loops: bool = True,
+    graph_version: int = 0,
 ) -> DeviceGraph:
     """Build the device representation.
 
@@ -326,6 +363,11 @@ def to_device(
     either, ring propagation counts duplicate paths (C-DUP semantics) —
     fine for idempotent algorithms, flagged by :func:`propagate`
     otherwise.
+
+    ``graph_version`` stamps the upload with the live graph's delta
+    version (:class:`repro.core.delta.GraphVersion`, DESIGN.md §9); it is
+    static pytree meta, so re-uploading after ``apply_delta`` changes the
+    jit cache key and every stale compiled executable dies with it.
     """
     if isinstance(graph, ExpandedGraph):
         g = graph.without_self_loops() if drop_self_loops else graph
@@ -334,6 +376,7 @@ def to_device(
             jnp.asarray(g.dst, dtype=jnp.int32),
             jnp.minimum(jnp.asarray(g.multiplicity, dtype=jnp.float32), 1.0),
             g.n,
+            graph_version=int(graph_version),
         )
     chains = tuple(tuple(_dev_edges(e) for e in c.edges) for c in graph.chains)
     direct = _dev_edges(graph.direct) if graph.direct is not None else None
@@ -359,6 +402,7 @@ def to_device(
         diag_mult=diag,
         n_real=graph.n_real,
         deduplicated=deduplicated,
+        graph_version=int(graph_version),
     )
 
 
@@ -473,25 +517,37 @@ def _build_fused(
     graph: CondensedGraph,
     chains_host,
     triples: Tuple[np.ndarray, np.ndarray, np.ndarray],
-) -> Tuple[Optional[FusedOperands], Optional[FusedOperands]]:
+) -> Tuple[Optional[FusedOperands], Optional[FusedOperands], str]:
     """Build the fused (last layer + DEDUP-C epilogue) operands for both
     directions.  Forward fuses into the last chain's final layer (the one
     whose output space is the real nodes); reverse propagation walks each
     chain backwards, so its final step is the same chain's *first* layer
-    transposed.  Requires that layer to be packable (no duplicates) —
-    returns ``(None, None)`` otherwise."""
+    transposed.  Requires that layer to be packable (no duplicates).
+
+    Returns ``(fused_fwd, fused_rev, standdown_reason)`` — the reason is
+    ``''`` when the operands were built and otherwise one of the
+    machine-readable pack-time stand-down reasons recorded on
+    :attr:`DevicePacked.fused_standdown`:
+
+    * ``'no_chains_or_empty_correction'`` — nothing to fuse into, or a
+      correction with zero triples (the epilogue would be a no-op);
+    * ``'unpackable_last_layer'`` — the fusing layer has duplicate edges
+      and cannot be bit-packed;
+    * ``'endpoint_mismatch'`` — the fusing layer's output space is not
+      the real-node space (the correction subtracts over real nodes).
+    """
     from ..kernels.correction import build_fused_stream, pack_correction
 
     cs, cd, cm = triples
     if not graph.chains or cs.size == 0:
-        return None, None
+        return None, None, "no_chains_or_empty_correction"
     _, last_fwd_bsb, _ = chains_host[-1][-1]
     _, _, first_rev_bsb = chains_host[-1][0]
     if last_fwd_bsb is None or first_rev_bsb is None:
-        return None, None
+        return None, None, "unpackable_last_layer"
     n = graph.n_real
     if last_fwd_bsb.n_dst != n or first_rev_bsb.n_dst != n:
-        return None, None
+        return None, None, "endpoint_mismatch"
     corr_fwd = pack_correction(cs, cd, cm, n_src=n, n_dst=n)
     corr_rev = pack_correction(cd, cs, cm, n_src=n, n_dst=n)
     fused_fwd = _upload_fused(
@@ -500,7 +556,7 @@ def _build_fused(
     fused_rev = _upload_fused(
         build_fused_stream(first_rev_bsb, corr_rev), first_rev_bsb, corr_rev
     )
-    return fused_fwd, fused_rev
+    return fused_fwd, fused_rev, ""
 
 
 def to_device_packed(
@@ -514,6 +570,7 @@ def to_device_packed(
     fuse_correction: bool = True,
     measure: bool = False,
     measure_kwargs: Optional[dict] = None,
+    graph_version: int = 0,
 ) -> DevicePacked:
     """Like :func:`to_device`, additionally packing every condensed layer
     into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
@@ -558,9 +615,13 @@ def to_device_packed(
     )
     fused_fwd = fused_rev = None
     triples = _correction_triples(correction)
-    if fuse_correction and triples is not None:
+    if triples is None:
+        standdown = "no_correction"
+    elif not fuse_correction:
+        standdown = "fuse_correction_disabled"
+    else:
         cs, cd, cm = triples
-        fused_fwd, fused_rev = _build_fused(
+        fused_fwd, fused_rev, standdown = _build_fused(
             graph,
             chains_host,
             (np.asarray(cs), np.asarray(cd), np.asarray(cm)),
@@ -576,6 +637,8 @@ def to_device_packed(
         feature_block=feature_block,
         fused_fwd=fused_fwd,
         fused_rev=fused_rev,
+        graph_version=int(graph_version),
+        fused_standdown=standdown,
     )
 
 
@@ -729,25 +792,35 @@ def _fused_applicable(
     x: jnp.ndarray,
     semiring: Semiring,
     hop_weight: Optional[float],
-) -> bool:
+) -> Tuple[bool, str]:
     """Trace-time fused-epilogue dispatch: batched plus-times ring steps
     only (the correction is a ring concept), no per-hop weighting (the
     fused output folds the subtraction into one chain's hop, which only
     commutes unweighted), and the same backend policy as the per-layer
     kernel (explicit 'pallas' always, 'xla' never, 'auto' on TPU when the
     fused working set — two streamed feature operands, the plane stack,
-    two accumulators — fits VMEM)."""
-    if (
-        fused is None
-        or x.ndim != 2
-        or semiring.name != "plus_times"
-        or hop_weight is not None
-    ):
-        return False
+    two accumulators — fits VMEM).
+
+    Returns ``(dispatch, reason)``: ``(True, '')`` when the fused kernel
+    runs, else ``False`` plus the machine-readable stand-down reason —
+    the pack-time :attr:`DevicePacked.fused_standdown` when the operands
+    were never built, or one of ``'frontier_1d'`` /
+    ``'semiring_<name>'`` / ``'hop_weight'`` / ``'backend_xla'`` /
+    ``'vmem_or_backend'`` for trace-time declines.  :func:`propagate`
+    counts each miss under its reason in
+    :data:`KERNEL_STANDDOWN_COUNT`."""
+    if fused is None:
+        return False, graph.fused_standdown or "not_built"
+    if x.ndim != 2:
+        return False, "frontier_1d"
+    if semiring.name != "plus_times":
+        return False, f"semiring_{semiring.name}"
+    if hop_weight is not None:
+        return False, "hop_weight"
     if graph.backend == "pallas":
-        return True
+        return True, ""
     if graph.backend == "xla":
-        return False
+        return False, "backend_xla"
     from ..kernels.pack import fused_fits_vmem
 
     fits = fused_fits_vmem(
@@ -757,7 +830,9 @@ def _fused_applicable(
         n_planes=len(fused.plane_weights),
         n_slots=int(fused.kind.shape[0]),
     )
-    return jax.default_backend() == "tpu" and fits
+    if jax.default_backend() == "tpu" and fits:
+        return True, ""
+    return False, "vmem_or_backend"
 
 
 def _fused_layer_spmm(
@@ -852,8 +927,13 @@ def propagate(
     fused = None
     if isinstance(graph, DevicePacked) and graph.correction is not None:
         cand = graph.fused_rev if reverse else graph.fused_fwd
-        if _fused_applicable(graph, cand, x, semiring, hop_weight):
+        ok, reason = _fused_applicable(graph, cand, x, semiring, hop_weight)
+        if ok:
             fused = cand
+        else:
+            KERNEL_STANDDOWN_COUNT[reason] = (
+                KERNEL_STANDDOWN_COUNT.get(reason, 0) + 1
+            )
 
     y = None
     for ci, chain in enumerate(graph.chains):

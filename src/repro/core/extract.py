@@ -176,6 +176,23 @@ def _build_node_space(
         type_parts.append(np.full(keys.size, len(type_names) - 1, dtype=np.int32))
         for prop in rule.head_vars[1:]:
             prop_parts.setdefault(prop, []).append((keys, t.column(prop)))
+    return _node_space_from_parts(key_parts, type_parts, prop_parts, type_names)
+
+
+def _node_space_from_parts(
+    key_parts: Sequence[np.ndarray],
+    type_parts: Sequence[np.ndarray],
+    prop_parts: Dict[str, List[Tuple[np.ndarray, np.ndarray]]],
+    type_names: List[str],
+) -> Tuple[NodeSpace, Dict[str, np.ndarray]]:
+    """Bound Nodes-rule parts (in rule order) -> ``(NodeSpace, props)``.
+
+    The first-occurrence-wins dedup + property scatter shared by the
+    one-shot build above and the incremental rebuild
+    (:mod:`repro.core.delta`, DESIGN.md §9) — one implementation, so the
+    two node spaces cannot drift.  ``key_parts`` may already carry a
+    delete mask applied by the caller: a key whose every occurrence was
+    masked out simply never reaches the union (the tombstone semantics)."""
     all_keys = np.concatenate(key_parts)
     all_types = np.concatenate(type_parts)
     uniq, first = np.unique(all_keys, return_index=True)

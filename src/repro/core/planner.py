@@ -98,6 +98,22 @@ class ExtractionBudget:
     n_spilled_records: int = 0
     merge_peak_resident_bytes: int = 0  # max operand+output bytes in one merge group
     n_merge_rounds: int = 0
+    # -- incremental-extraction account (core/delta.py; DESIGN.md §9) ----
+    n_delta_applies: int = 0
+    delta_rows_inserted: int = 0     # insert rows bound across applies
+    delta_rows_deleted: int = 0      # tombstoned rows across applies
+    delta_rules_reused: int = 0      # Edges rules reused verbatim
+    delta_rules_recomputed: int = 0  # Edges rules re-planned/re-executed
+
+    def charge_delta(self, n_inserted: int, n_deleted: int) -> None:
+        """Record one :func:`repro.core.delta.apply_delta` pass.  Delta
+        binds and recomputed segments go through the same :meth:`charge` /
+        :meth:`release` rows account as sharded extraction; these counters
+        only record how much write traffic the live graph absorbed and
+        how much cached work each apply salvaged."""
+        self.n_delta_applies += 1
+        self.delta_rows_inserted += int(n_inserted)
+        self.delta_rows_deleted += int(n_deleted)
 
     def charge(self, n_rows: int, what: str = "rows") -> None:
         self.resident_rows += int(n_rows)
@@ -194,6 +210,12 @@ class ExtractionBudget:
             out["n_spilled_records"] = self.n_spilled_records
             out["n_merge_rounds"] = self.n_merge_rounds
             out["merge_peak_resident_bytes"] = self.merge_peak_resident_bytes
+        if self.n_delta_applies:
+            out["n_delta_applies"] = self.n_delta_applies
+            out["delta_rows_inserted"] = self.delta_rows_inserted
+            out["delta_rows_deleted"] = self.delta_rows_deleted
+            out["delta_rules_reused"] = self.delta_rules_reused
+            out["delta_rules_recomputed"] = self.delta_rules_recomputed
         return out
 
 
@@ -284,6 +306,19 @@ def _bind_table(
     binding a row slice equals slicing the bound table: the property the
     sharded pipeline uses to bind base relations block-at-a-time
     (DESIGN.md §7)."""
+    out, _ = _bind_table_rows(table, atom, comparisons)
+    return out
+
+
+def _bind_table_rows(
+    table: Table, atom: Atom, comparisons: Sequence[Comparison]
+) -> Tuple[Table, np.ndarray]:
+    """:func:`_bind_table` with row provenance: also returns the base-row
+    indices (ascending, into ``table``) of the surviving bound rows.  The
+    incremental pipeline (:mod:`repro.core.delta`, DESIGN.md §9) keeps
+    these so a later delete can tombstone exactly the bound rows whose
+    base rows went away — the delete-mask extension of the row-local
+    binding property above."""
     cols = table.column_names
     if len(atom.args) != len(cols):
         raise ValueError(
@@ -304,8 +339,9 @@ def _bind_table(
     for cmp_ in comparisons:
         if cmp_.var in var_cols:
             mask &= np.asarray(cmp_.apply(var_cols[cmp_.var]), dtype=bool)
-    out = Table(atom.relation, {v: c[mask] for v, c in var_cols.items()})
-    return out
+    rows = np.nonzero(mask)[0]
+    out = Table(atom.relation, {v: c[rows] for v, c in var_cols.items()})
+    return out, rows
 
 
 def plan_rule(catalog: Catalog, rule: Rule, mode: str = "auto") -> ChainPlan:

@@ -93,6 +93,7 @@ def sharded_extract_to_device(
     correction_budget_triples: Optional[int] = None,
     spill_dir: Optional[str] = None,
     max_assembly_bytes: Optional[int] = None,
+    delta_log: Optional["object"] = None,
 ):
     """Catalog -> budgeted sharded extraction -> device graph, end to end.
 
@@ -110,22 +111,50 @@ def sharded_extract_to_device(
     edges per slice) before upload.  Returns ``(extraction_result,
     device_graph)``; the device graph is duplicate-exact (DEDUP-C) and
     identical to the one the unsharded pipeline would build.
+
+    ``delta_log``: a :class:`~repro.core.serialize.DeltaLog` of committed
+    writes since the base catalog.  When given, the pipeline resumes from
+    base graph + log via :meth:`~repro.core.delta.LiveGraph.replay`
+    (byte-identical to extracting the mutated catalog from scratch) and
+    the device graph is stamped with the replayed ``graph_version`` — so
+    a restarted server comes back serving the *current* graph, not the
+    base snapshot.  Sharded spill staging applies to the base build only
+    (delta batches are small); both paths honor ``max_resident_rows``.
     """
     from repro.core import dedup, engine
     from repro.core.extract import extract_sharded
 
-    res = extract_sharded(
-        catalog, dsl_text, n_shards=n_shards,
-        max_resident_rows=max_resident_rows, mode=mode,
-        spill_dir=spill_dir, max_assembly_bytes=max_assembly_bytes,
-    )
+    graph_version = 0
+    if delta_log is not None:
+        from repro.core.delta import LiveGraph
+        from repro.core.planner import ExtractionBudget
+
+        budget = (
+            ExtractionBudget(max_resident_rows=max_resident_rows)
+            if max_resident_rows is not None
+            else None
+        )
+        live = LiveGraph.replay(
+            catalog, dsl_text, delta_log, mode=mode, budget=budget
+        )
+        res = live.result()
+        graph_version = live.version
+    else:
+        res = extract_sharded(
+            catalog, dsl_text, n_shards=n_shards,
+            max_resident_rows=max_resident_rows, mode=mode,
+            spill_dir=spill_dir, max_assembly_bytes=max_assembly_bytes,
+        )
     corr = dedup.build_correction_streaming(
         res.graph, budget_triples=correction_budget_triples
     )
     if packed:
         dev = engine.to_device_packed(
-            res.graph, correction=corr, pack_shard_edges=pack_shard_edges
+            res.graph, correction=corr, pack_shard_edges=pack_shard_edges,
+            graph_version=graph_version,
         )
     else:
-        dev = engine.to_device(res.graph, correction=corr)
+        dev = engine.to_device(
+            res.graph, correction=corr, graph_version=graph_version
+        )
     return res, dev

@@ -73,13 +73,51 @@ class BatchedServer:
                 return i
         return None
 
+    def _active_length(self) -> Optional[int]:
+        """Common sequence length of the active slots, or None if idle.
+
+        The shared :class:`KVCache` carries one scalar ``length``, so every
+        active slot must sit at the same position; admission enforces that
+        invariant and decode preserves it (all active slots advance one
+        token per step)."""
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                return int(self.lengths[i])
+        return None
+
+    def can_admit(self, req: Request) -> bool:
+        """True iff ``admit(req)`` would succeed right now: a slot is free
+        and the prompt length matches the active batch (or the batch is
+        idle).  Schedulers use this to defer ragged requests until the
+        current batch drains instead of tripping the admission error."""
+        if self._free_slot() is None:
+            return False
+        active = self._active_length()
+        return active is None or int(req.prompt.size) == active
+
     def admit(self, req: Request) -> bool:
-        """Prefill a request into a free slot (one slot at a time demo)."""
+        """Prefill a request into a free slot (one slot at a time demo).
+
+        Raises ``ValueError`` on ragged admission — a prompt whose length
+        differs from the active slots'.  The batch cache has a single
+        scalar ``length``, so decoding a shorter request at the longer
+        batch position would read garbage keys/values (and previously
+        served silently wrong tokens).  Use :meth:`can_admit` to defer
+        instead."""
         from ..models import transformer
 
         slot = self._free_slot()
         if slot is None:
             return False
+        active = self._active_length()
+        if active is not None and int(req.prompt.size) != active:
+            raise ValueError(
+                f"ragged admission: prompt length {int(req.prompt.size)} != "
+                f"active batch length {active}; the shared KV cache has one "
+                f"scalar length, so all active slots must decode in lockstep. "
+                f"Use can_admit() to defer this request until the batch "
+                f"drains."
+            )
         # per-slot prefill: run the prompt through with a slot-local cache,
         # then splice into the batch cache.
         scfg = self.cfg
@@ -107,10 +145,14 @@ class BatchedServer:
         for i, s in enumerate(self.slots):
             if s is not None and s.generated:
                 tokens[i, 0] = s.generated[-1]
-        # batch cache length: slots grow in lockstep in this demo; use max.
+        # Admission enforces that active slots share one length, so the
+        # common active length is the batch position.  (max() over all
+        # slots would be wrong: a freed slot's stale length, or a longer
+        # concurrent prompt, would shift every other slot's attention
+        # window past its real history.)
         cache = transformer.KVCache(
             k=self.cache.k, v=self.cache.v,
-            length=jnp.asarray(int(self.lengths.max()), jnp.int32),
+            length=jnp.asarray(self._active_length(), jnp.int32),
         )
         nxt, cache = self._decode(self.params, cache, jnp.asarray(tokens))
         self.cache = cache
@@ -123,16 +165,27 @@ class BatchedServer:
             if len(s.generated) >= s.max_new_tokens:
                 s.done = True
                 self.slots[i] = None
+                self.lengths[i] = 0
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         pending = list(requests)
         out: Dict[int, List[int]] = {}
         active: List[Request] = []
         while pending or any(self.slots):
-            while pending and self._free_slot() is not None:
-                r = pending.pop(0)
-                self.admit(r)
-                active.append(r)
+            # Admit every pending request whose prompt length matches the
+            # active batch (all of them when idle); ragged requests are
+            # deferred until the batch drains rather than rejected.  No
+            # livelock: with all slots free any request is admissible, and
+            # with active slots step() always makes progress.
+            admitted = True
+            while admitted:
+                admitted = False
+                for j, r in enumerate(pending):
+                    if self.can_admit(r):
+                        self.admit(pending.pop(j))
+                        active.append(r)
+                        admitted = True
+                        break
             self.step()
             for r in active:
                 if r.done:
@@ -155,11 +208,18 @@ class GraphQuery:
     from a one-hot restart at ``node``), or ``'common_neighbors'``
     (path-multiplicity scores — the recsys scoring primitive; needs a
     duplicate-counting graph, e.g. raw C-DUP kept with self loops).
+
+    ``graph_version``: the graph version the client computed ``node``
+    against (e.g. from :class:`~repro.core.delta.LiveGraph`).  ``None``
+    means "whatever the server holds"; a mismatch with the server's
+    current version is rejected at submit time — node ids are only
+    meaningful relative to one version's node space.
     """
 
     qid: int
     kind: str
     node: int
+    graph_version: Optional[int] = None
 
 
 class GraphQueryServer:
@@ -182,6 +242,7 @@ class GraphQueryServer:
         bfs_max_iters: Optional[int] = None,
         counts_graph: Optional[DeviceGraph] = None,
         bucket_widths: Tuple[int, ...] = (8, 16, 32),
+        graph_version: Optional[int] = None,
     ):
         """``graph`` must be duplicate-exact (EXP / DEDUP-C / DEDUP-1) for
         ``'ppr'`` queries; ``'common_neighbors'`` queries are answered from
@@ -191,9 +252,17 @@ class GraphQueryServer:
         ``bucket_widths``: flush groups are padded up to the smallest of
         these fixed widths (capped by ``max_batch``), so live traffic with
         arbitrary group sizes compiles at most ``len(bucket_widths) + 1``
-        propagation shapes per kind instead of one per distinct B."""
+        propagation shapes per kind instead of one per distinct B.
+
+        ``graph_version``: the version this server's graph was extracted
+        at; defaults to the device graph's own ``graph_version`` field.
+        Queries stamped with a different version are rejected — see
+        :class:`GraphQuery` and :meth:`update_graph`."""
         self.graph = graph
         self.counts_graph = counts_graph if counts_graph is not None else graph
+        if graph_version is None:
+            graph_version = int(getattr(graph, "graph_version", 0))
+        self.graph_version = int(graph_version)
         self.max_batch = int(max_batch)
         self.ppr_iters = int(ppr_iters)
         self.damping = float(damping)
@@ -226,6 +295,7 @@ class GraphQueryServer:
         budget_triples: Optional[int] = None,
         packed: bool = False,
         drop_self_loops: bool = True,
+        graph_version: int = 0,
         **kwargs,
     ) -> "GraphQueryServer":
         """Load a host ``CondensedGraph`` for serving.
@@ -253,9 +323,12 @@ class GraphQueryServer:
         )
         to_dev = _engine.to_device_packed if packed else _engine.to_device
         exact = to_dev(
-            graph, correction=correction, drop_self_loops=drop_self_loops
+            graph, correction=correction, drop_self_loops=drop_self_loops,
+            graph_version=graph_version,
         )
-        counts = to_dev(graph, drop_self_loops=False)
+        counts = to_dev(
+            graph, drop_self_loops=False, graph_version=graph_version
+        )
         server = cls(exact, counts_graph=counts, **kwargs)
         server.correction_accounting = correction.accounting
         return server
@@ -263,6 +336,18 @@ class GraphQueryServer:
     def _validate(self, query: GraphQuery, extra_qids: set) -> None:
         if query.kind not in ("bfs", "ppr", "common_neighbors"):
             raise ValueError(f"unknown query kind {query.kind!r}")
+        # Node ids are positions in one version's node space; a query
+        # stamped against an older (or newer) graph would be answered
+        # about a different node entirely.  Reject instead of guessing.
+        if (
+            query.graph_version is not None
+            and int(query.graph_version) != self.graph_version
+        ):
+            raise ValueError(
+                f"stale graph_version {int(query.graph_version)}: server "
+                f"is serving version {self.graph_version}; re-resolve the "
+                f"node id against the current graph and resubmit"
+            )
         if query.qid in self._pending_qids or query.qid in extra_qids:
             raise ValueError(
                 f"qid {query.qid} already pending; answers are keyed by qid"
@@ -282,6 +367,40 @@ class GraphQueryServer:
         self._validate(query, set())
         self.pending.append(query)
         self._pending_qids.add(query.qid)
+
+    def update_graph(
+        self,
+        graph: DeviceGraph,
+        counts_graph: Optional[DeviceGraph] = None,
+        graph_version: Optional[int] = None,
+    ) -> None:
+        """Swap in a freshly extracted device graph (e.g. after
+        :meth:`~repro.core.delta.LiveGraph.apply_delta`) and bump
+        ``graph_version``.
+
+        The version lives in the device graphs' jit-static metadata, so
+        the bump invalidates every compiled propagation executable and
+        cached packed operand by construction — the next flush traces
+        against the new graph.  Pending queries must be flushed (or
+        dropped) first: they were validated against the old node space.
+        """
+        if self.pending:
+            raise ValueError(
+                f"{len(self.pending)} queries pending against version "
+                f"{self.graph_version}; flush() before update_graph()"
+            )
+        if graph_version is None:
+            graph_version = int(getattr(graph, "graph_version", 0))
+            if graph_version == self.graph_version:
+                graph_version = self.graph_version + 1
+        if int(graph_version) <= self.graph_version:
+            raise ValueError(
+                f"graph_version must increase: {int(graph_version)} <= "
+                f"current {self.graph_version}"
+            )
+        self.graph = graph
+        self.counts_graph = counts_graph if counts_graph is not None else graph
+        self.graph_version = int(graph_version)
 
     def _answer_group(
         self, kind: str, group: List[GraphQuery]

@@ -1,0 +1,262 @@
+"""Serving/advisor/engine bugfix regressions (one sweep, DESIGN.md §9).
+
+Three previously silent wrong-answer paths, now either fixed or loudly
+surfaced:
+
+* ``BatchedServer`` decoded every slot at ``lengths.max()`` — a slot
+  admitted with a shorter prompt (or after a longer neighbor finished)
+  attended over other requests' KV positions.  Admission now enforces
+  the lockstep invariant (``can_admit`` / ragged ``admit`` raises) and
+  ``run`` defers ragged requests until the batch drains.
+* ``advisor.recommend`` ran two unbudgeted full expansions to size the
+  graph — the advisor could blow the memory wall it advises about.  It
+  now takes one budgeted ``expansion_stats`` sweep and attaches the
+  ``ExpansionAccounting`` evidence to the ``Recommendation``.
+* The fused DEDUP-C epilogue stood down silently (min/max semirings,
+  ``hop_weight``, 1-D frontiers, operands never built); the reason is
+  now machine-readable on ``DevicePacked.fused_standdown`` and every
+  propagate-time miss is counted in ``KERNEL_STANDDOWN_COUNT``.
+
+Plus the serving half of the incremental-extraction contract:
+``GraphQueryServer`` rejects queries stamped with a stale
+``graph_version`` and ``update_graph`` swaps in a fresh graph under a
+strictly increasing version.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import random_membership_graph
+
+from repro.configs.base import TransformerConfig
+from repro.core import dedup, engine, recommend
+from repro.core.engine import KERNEL_STANDDOWN_COUNT, reset_kernel_dispatch_count
+from repro.core.semiring import MIN_PLUS, PLUS_TIMES
+from repro.serve import BatchedServer, GraphQuery, GraphQueryServer, Request
+
+
+# ---------------------------------------------------------------------------
+# BatchedServer: ragged admission
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    import jax
+
+    from repro.models import transformer
+
+    cfg = TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab_size=64, microbatches=1, remat_policy="none",
+    )
+    return transformer.init_params(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _req(rid, length, max_new=4, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid, prompt=rng.integers(0, 64, size=length),
+                   max_new_tokens=max_new)
+
+
+def test_ragged_admission_rejected(lm):
+    params, cfg = lm
+    server = BatchedServer(params, cfg, batch_slots=3, max_len=32)
+    assert server.admit(_req(0, 6))
+    assert server.can_admit(_req(1, 6))
+    assert not server.can_admit(_req(2, 4))
+    with pytest.raises(ValueError, match="ragged"):
+        server.admit(_req(3, 4))
+    # the failed admission took no slot and corrupted no state
+    assert sum(s is not None for s in server.slots) == 1
+    assert server.admit(_req(4, 6))
+
+
+def test_step_uses_common_active_length_not_stale_max(lm):
+    """The regression for the ``lengths.max()`` bug: serve a long request
+    to completion, then a short one.  Previously the freed slot's stale
+    length shifted the short request's attention window past its real
+    history; now the decode runs at the active batch's common length and
+    matches a fresh server bit-for-bit."""
+    params, cfg = lm
+    server = BatchedServer(params, cfg, batch_slots=2, max_len=32)
+    long_out = server.run([_req(0, 12, max_new=4)])
+    assert all(s is None for s in server.slots)
+    got = server.run([_req(1, 5, max_new=4)])
+    fresh = BatchedServer(params, cfg, batch_slots=2, max_len=32)
+    want = fresh.run([_req(1, 5, max_new=4)])
+    assert got[1] == want[1]
+    assert len(long_out[0]) >= 4
+
+
+def test_run_defers_ragged_requests_and_serves_all(lm):
+    """serve_lm-style traffic: ragged prompts through run() — deferral,
+    not rejection — and every request's answer equals the single-request
+    decode (batching is a pure throughput optimization)."""
+    params, cfg = lm
+    server = BatchedServer(params, cfg, batch_slots=3, max_len=32)
+    reqs = [_req(i, length, max_new=3)
+            for i, length in enumerate([6, 6, 4, 6, 9, 4])]
+    out = server.run(reqs)
+    assert set(out) == set(range(6))
+    assert all(len(v) >= 3 for v in out.values())
+    for i, length in enumerate([6, 6, 4, 6, 9, 4]):
+        fresh = BatchedServer(params, cfg, batch_slots=3, max_len=32)
+        assert fresh.run([_req(i, length, max_new=3)])[i] == out[i], i
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue stand-downs: surfaced and counted
+# ---------------------------------------------------------------------------
+
+def _packed(backend="pallas", fuse_correction=True, correction=True):
+    rng = np.random.default_rng(5)
+    g = random_membership_graph(20, 8, 4, rng)
+    corr = dedup.build_correction(g) if correction else None
+    return g, engine.to_device_packed(
+        g, correction=corr, backend=backend, fuse_correction=fuse_correction
+    )
+
+
+def test_standdown_reason_on_packed_operands():
+    _, dev = _packed()
+    assert dev.fused_standdown == ""  # fused operands built
+    _, no_corr = _packed(correction=False)
+    assert no_corr.fused_standdown == "no_correction"
+    _, disabled = _packed(fuse_correction=False)
+    assert disabled.fused_standdown == "fuse_correction_disabled"
+
+
+def test_standdown_reasons_counted_per_cause():
+    g, dev = _packed()
+    X = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((g.n_real, 3)).astype(np.float32))
+    reset_kernel_dispatch_count()
+    engine.propagate(dev, X, PLUS_TIMES)                    # fused runs
+    assert KERNEL_STANDDOWN_COUNT == {}
+    engine.propagate(dev, X[:, 0], PLUS_TIMES)              # 1-D frontier
+    engine.propagate(dev, X, PLUS_TIMES, hop_weight=0.5)    # per-hop weight
+    inf = jnp.where(X > 0, X, jnp.inf)
+    engine.propagate(dev, inf, MIN_PLUS)                    # non-ring semiring
+    assert KERNEL_STANDDOWN_COUNT == {
+        "frontier_1d": 1,
+        "hop_weight": 1,
+        "semiring_min_plus": 1,
+    }
+    _, xla = _packed(backend="xla")
+    engine.propagate(xla, X, PLUS_TIMES)
+    assert KERNEL_STANDDOWN_COUNT["backend_xla"] == 1
+    _, disabled = _packed(fuse_correction=False)
+    engine.propagate(disabled, X, PLUS_TIMES)               # never built
+    assert KERNEL_STANDDOWN_COUNT["fuse_correction_disabled"] == 1
+    reset_kernel_dispatch_count()
+    assert KERNEL_STANDDOWN_COUNT == {}
+
+
+def test_standdown_path_still_correct():
+    """Standing down is a dispatch decision, never a semantics change."""
+    g, dev = _packed()
+    ref = engine.to_device(g, correction=dedup.build_correction(g))
+    X = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((g.n_real, 2)).astype(np.float32))
+    got = engine.propagate(dev, X, PLUS_TIMES, hop_weight=0.5)
+    want = engine.propagate(ref, X, PLUS_TIMES, hop_weight=0.5)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Advisor: one budgeted sweep, accounting attached
+# ---------------------------------------------------------------------------
+
+def test_recommend_single_budgeted_sweep_with_accounting():
+    rng = np.random.default_rng(7)
+    g = random_membership_graph(40, 12, 5, rng)
+    budget = 4 * g.n_paths_expanded() + 64
+    rec = recommend(g, workload="multi_pass", budget_triples=budget)
+    acct = rec.expansion_accounting
+    assert acct is not None
+    assert acct.budget_triples == budget
+    assert acct.n_chunks >= 1
+    assert acct.n_triples_out == g.n_edges_expanded()
+    assert 0 < acct.peak_resident_triples <= budget
+    # the budgeted single-pass stats equal the legacy two-pass ones
+    assert rec.expansion_ratio == pytest.approx(
+        g.n_edges_expanded() / max(g.n_edges_condensed, 1)
+    )
+    assert rec.duplication_ratio == pytest.approx(g.duplication_ratio())
+
+
+def test_recommend_chunked_sweep_matches_unchunked():
+    rng = np.random.default_rng(8)
+    g = random_membership_graph(30, 10, 4, rng)
+    whole = recommend(g, workload="repeated")
+    chunked = recommend(g, workload="repeated", chunk_rows=4)
+    assert chunked.expansion_accounting.n_chunks > whole.expansion_accounting.n_chunks
+    assert chunked.expansion_ratio == pytest.approx(whole.expansion_ratio)
+    assert chunked.duplication_ratio == pytest.approx(whole.duplication_ratio)
+    assert chunked.host_representation == whole.host_representation
+    assert chunked.device_representation == whole.device_representation
+
+
+# ---------------------------------------------------------------------------
+# GraphQueryServer: graph_version staleness contract
+# ---------------------------------------------------------------------------
+
+def _server(version=0, **kwargs):
+    rng = np.random.default_rng(9)
+    g = random_membership_graph(30, 10, 4, rng)
+    corr = dedup.build_correction(g)
+    dev = engine.to_device(g, correction=corr, graph_version=version)
+    return GraphQueryServer(dev, **kwargs), g
+
+
+def test_stale_version_submits_rejected():
+    server, _ = _server(version=2)
+    assert server.graph_version == 2  # inherited from the device graph
+    server.submit(GraphQuery(1, "bfs", 0))                    # unstamped: ok
+    server.submit(GraphQuery(2, "bfs", 1, graph_version=2))   # current: ok
+    with pytest.raises(ValueError, match="stale"):
+        server.submit(GraphQuery(3, "bfs", 2, graph_version=1))
+    with pytest.raises(ValueError, match="stale"):
+        server.run([GraphQuery(4, "ppr", 0, graph_version=3)])
+    answers = server.flush()
+    assert set(answers) == {1, 2}
+
+
+def test_update_graph_bumps_version_and_invalidates():
+    server, g = _server(version=0)
+    server.submit(GraphQuery(1, "bfs", 0))
+    with pytest.raises(ValueError, match="flush"):
+        server.update_graph(server.graph)
+    server.flush()
+    old = server.graph
+    corr = dedup.build_correction(g)
+    fresh = engine.to_device(g, correction=corr, graph_version=7)
+    server.update_graph(fresh, graph_version=7)
+    assert server.graph_version == 7 and server.graph is fresh
+    # queries stamped against the superseded version now bounce
+    with pytest.raises(ValueError, match="stale"):
+        server.submit(GraphQuery(5, "bfs", 0, graph_version=0))
+    server.submit(GraphQuery(6, "bfs", 0, graph_version=7))
+    server.flush()
+    with pytest.raises(ValueError, match="increase"):
+        server.update_graph(old, graph_version=7)
+    # version-less update of a same-version graph still moves forward
+    server.update_graph(fresh)
+    assert server.graph_version == 8
+
+
+def test_version_is_jit_static_metadata():
+    """The invalidation mechanism: graph_version lives in the device
+    pytree's static metadata, so two versions of the same graph hash
+    differently under jit — a bump can never serve a stale executable."""
+    rng = np.random.default_rng(11)
+    g = random_membership_graph(16, 6, 3, rng)
+    a = engine.to_device(g, graph_version=0)
+    b = engine.to_device(g, graph_version=1)
+    import jax
+
+    la = jax.tree_util.tree_structure(a)
+    lb = jax.tree_util.tree_structure(b)
+    assert la != lb
+    assert "graph_version" in repr(la) or la != lb

@@ -1,0 +1,349 @@
+"""Incremental extraction (DESIGN.md §9).
+
+The delta contract: ``LiveGraph.apply_delta`` over any sequence of row
+inserts/deletes produces a graph *byte-identical* (``graphs_identical``
+— dtypes, shapes, values, order, properties) to a fresh ``extract`` of
+the mutated catalog, at a fraction of the work — untouched rules are
+reused, touched single-atom segments rebind only the mutated table.
+``mutate_catalog`` is the executable reference for the mutation
+semantics (deletes first, inserts appended at the tail).
+
+The durability contract mirrors the extraction spill store
+(tests/test_extract_spill.py): a ``DeltaLog`` append is
+record-then-manifest, so a crash leaves either tmp litter or an
+uncertified tail — both rejected at ``open`` and dropped by
+``recover=True`` — and replaying the certified prefix over the base
+catalog rebuilds the last acknowledged graph exactly.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeltaLog,
+    ExtractionBudget,
+    LiveGraph,
+    SpillError,
+    apply_delta,
+    extract,
+    graphs_identical,
+    mutate_catalog,
+)
+from repro.core.serialize import SPILL_MANIFEST
+from repro.data.synth import dblp_catalog, tpch_catalog
+
+Q_DBLP = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+Q_TPCH = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+
+
+@pytest.fixture(scope="module")
+def dblp():
+    return dblp_catalog(n_authors=300, n_pubs=600, mean_authors_per_pub=4.0, seed=0)
+
+
+def _ap_inserts(aids, pids):
+    return {"AuthorPub": {"aid": np.asarray(aids, np.int64),
+                          "pid": np.asarray(pids, np.int64)}}
+
+
+# -- byte-identity against fresh extraction of the mutated catalog -----------
+
+@pytest.mark.parametrize("mode", ["auto", "condensed", "expanded"])
+def test_base_build_matches_extract(dblp, mode):
+    live = LiveGraph(dblp, Q_DBLP, mode=mode)
+    ref = extract(dblp, Q_DBLP, mode=mode)
+    assert live.version == 0
+    assert graphs_identical(live.graph, ref.graph)
+
+
+def test_empty_delta_is_identity_but_bumps_version(dblp):
+    live = LiveGraph(dblp, Q_DBLP)
+    base = extract(dblp, Q_DBLP)
+    g, v = live.apply_delta()
+    assert int(v) == 1 and live.version == 1
+    assert graphs_identical(g, base.graph)
+
+
+@pytest.mark.parametrize("mode", ["auto", "condensed", "expanded"])
+def test_insert_delete_sequence_byte_identical(dblp, mode):
+    """The acceptance sequence: non-node inserts, deletes,
+    delete-then-reinsert of a node key, then a mixed delta — each step
+    byte-identical to extracting the mutated catalog from scratch."""
+    live = LiveGraph(dblp, Q_DBLP, mode=mode)
+    cat = dblp
+    steps = [
+        (_ap_inserts([1, 2, 299], [1000001, 1000001, 1000002]), None),
+        (None, {"AuthorPub": ("pid", np.array([1000003, 1000004]))}),
+        # delete an Author then reinsert the same key with a new name,
+        # plus a brand-new author: tombstone + tail insert in one delta
+        ({"Author": {"aid": np.array([5, 300]),
+                     "name": np.array(["author_5b", "author_300"])}},
+         {"Author": ("aid", np.array([5]))}),
+        ({"AuthorPub": {"aid": np.array([300]), "pid": np.array([1000005])},
+          "Author": {"aid": np.array([301]), "name": np.array(["author_301"])}},
+         {"AuthorPub": ("aid", np.array([7]))}),
+    ]
+    for i, (ins, dels) in enumerate(steps):
+        g, v = live.apply_delta(inserts=ins, deletes=dels)
+        cat = mutate_catalog(cat, inserts=ins, deletes=dels)
+        assert int(v) == i + 1
+        assert graphs_identical(g, extract(cat, Q_DBLP, mode=mode).graph), i
+
+
+@pytest.mark.parametrize("preprocess", [False, True])
+def test_multi_atom_rule_delta(preprocess):
+    """Join rules (hash-join segments interleave rows from both sides)
+    fall back to recomputing the touched segment — still byte-identical,
+    including under virtual-node preprocessing."""
+    cat = tpch_catalog(200, 600, 60, 2.0, seed=1)
+    live = LiveGraph(cat, Q_TPCH, mode="condensed", preprocess=preprocess)
+    ins = {"LineItem": {"okey": np.array([5000001, 5000002]),
+                        "pkey": np.array([9000001, 9000002])}}
+    dels = {"Orders": ("okey", np.array([5000010]))}
+    g, _ = live.apply_delta(inserts=ins, deletes=dels)
+    mut = mutate_catalog(cat, inserts=ins, deletes=dels)
+    ref = extract(mut, Q_TPCH, mode="condensed", preprocess=preprocess)
+    assert graphs_identical(g, ref.graph)
+
+
+def test_module_level_apply_delta_delegates(dblp):
+    live = LiveGraph(dblp, Q_DBLP)
+    ins = _ap_inserts([3], [1000002])
+    g, v = apply_delta(live, inserts=ins)
+    assert int(v) == 1
+    assert graphs_identical(
+        g, extract(mutate_catalog(dblp, inserts=ins), Q_DBLP).graph
+    )
+
+
+def test_delta_budget_accounting(dblp):
+    """Delta applies are charged to the extraction budget: rows in/out
+    counted, untouched rules reused (Nodes table untouched -> the Edges
+    rule over AuthorPub recomputes but Author-derived state is reused)."""
+    budget = ExtractionBudget()
+    live = LiveGraph(dblp, Q_DBLP, budget=budget)
+    live.apply_delta(inserts=_ap_inserts([1, 2], [1000001, 1000001]))
+    assert budget.n_delta_applies == 1
+    assert budget.delta_rows_inserted == 2
+    assert budget.delta_rows_deleted == 0
+    assert budget.delta_rules_recomputed == 1  # the AuthorPub edge rule
+    live.apply_delta(deletes={"Author": ("aid", np.array([1]))})
+    assert budget.n_delta_applies == 2
+    assert budget.delta_rows_deleted >= 1
+    assert "delta_rows_inserted" in budget.summary()
+
+
+def test_mutate_catalog_reference_semantics(dblp):
+    """Deletes first, inserts appended at the tail — so delete-then-
+    reinsert of a key lands the fresh row at the end of the table."""
+    ins = {"Author": {"aid": np.array([5]), "name": np.array(["author_5b"])}}
+    dels = {"Author": ("aid", np.array([5]))}
+    mut = mutate_catalog(dblp, inserts=ins, deletes=dels)
+    a = mut.table("Author")
+    aid = a.column("aid")
+    assert len(a) == len(dblp.table("Author"))
+    assert aid[-1] == 5 and np.count_nonzero(aid == 5) == 1
+    assert mut.table("Author").column("name")[-1] == "author_5b"
+    # the input catalog is never mutated in place
+    assert np.count_nonzero(dblp.table("Author").column("aid") == 5) == 1
+    assert dblp.table("Author").column("name")[5] != "author_5b"
+
+
+def test_bad_deltas_rejected_and_state_unchanged(dblp, tmp_path):
+    log = DeltaLog(str(tmp_path / "log"))
+    live = LiveGraph(dblp, Q_DBLP, log=log)
+    before = live.graph
+    with pytest.raises(KeyError):
+        live.apply_delta(inserts={"NoSuchTable": {"x": np.array([1])}})
+    with pytest.raises(ValueError, match="column"):
+        live.apply_delta(inserts={"Author": {"aid": np.array([999])}})  # no name
+    with pytest.raises(ValueError, match="key column"):
+        live.apply_delta(deletes={"Author": ("nope", np.array([1]))})
+    # validation happens before the WAL append and before any state
+    # change: the log stays clean, the version stays put
+    assert len(log) == 0
+    assert live.version == 0
+    assert live.graph is before
+
+
+# -- random-sequence property (tier2 hypothesis + offline seeds) -------------
+
+def _random_delta(rng, n_authors):
+    inserts, deletes = {}, {}
+    if rng.random() < 0.8:
+        k = int(rng.integers(1, 5))
+        inserts["AuthorPub"] = {
+            "aid": rng.integers(0, n_authors + 20, size=k),
+            "pid": rng.integers(1_000_000, 1_000_040, size=k),
+        }
+    if rng.random() < 0.5:
+        k = int(rng.integers(1, 4))
+        deletes["AuthorPub"] = (
+            "pid", rng.integers(1_000_000, 1_000_040, size=k)
+        )
+    if rng.random() < 0.4:
+        ids = rng.integers(0, n_authors + 20, size=int(rng.integers(1, 3)))
+        inserts["Author"] = {
+            "aid": ids,
+            "name": np.array([f"author_{i}r" for i in ids]),
+        }
+    if rng.random() < 0.3:
+        deletes["Author"] = ("aid", rng.integers(0, n_authors, size=2))
+    return inserts or None, deletes or None
+
+
+def _check_delta_sequence(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    cat = dblp_catalog(n_authors=60, n_pubs=120, mean_authors_per_pub=3.0,
+                       seed=seed % 7)
+    live = LiveGraph(cat, Q_DBLP)
+    for step in range(3):
+        ins, dels = _random_delta(rng, 60)
+        g, v = live.apply_delta(inserts=ins, deletes=dels)
+        cat = mutate_catalog(cat, inserts=ins, deletes=dels)
+        assert int(v) == step + 1
+        ref = extract(cat, Q_DBLP)
+        assert graphs_identical(g, ref.graph), f"seed={seed} step={step}"
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=15, deadline=None)
+def test_random_delta_sequences_byte_identical(seed):
+    _check_delta_sequence(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_random_delta_sequences_byte_identical_offline(seed):
+    _check_delta_sequence(seed)
+
+
+# -- delta log: WAL round trip, replay, crash safety -------------------------
+
+def _logged_live(dblp, path):
+    log = DeltaLog(str(path))
+    live = LiveGraph(dblp, Q_DBLP, log=log)
+    live.apply_delta(inserts=_ap_inserts([1], [1000009]))
+    live.apply_delta(deletes={"Author": ("aid", np.array([3]))})
+    live.apply_delta(
+        inserts={"Author": {"aid": np.array([3]), "name": np.array(["author_3"])}},
+        deletes={"AuthorPub": ("pid", np.array([1000000]))},
+    )
+    return log, live
+
+
+def test_log_append_read_round_trip(dblp, tmp_path):
+    log, _ = _logged_live(dblp, tmp_path / "log")
+    assert len(log) == 3
+    ins, dels = log.read(0)
+    assert set(ins) == {"AuthorPub"} and dels == {}
+    assert np.array_equal(ins["AuthorPub"]["pid"], [1000009])
+    ins, dels = log.read(2)
+    assert dels["AuthorPub"][0] == "pid"
+    assert np.array_equal(dels["AuthorPub"][1], [1000000])
+    assert ins["Author"]["name"].dtype.kind == "U"
+    with pytest.raises(IndexError):
+        log.read(3)
+
+
+def test_replay_rebuilds_identical_graph(dblp, tmp_path):
+    log, live = _logged_live(dblp, tmp_path / "log")
+    relive = LiveGraph.replay(dblp, Q_DBLP, DeltaLog.open(str(tmp_path / "log")))
+    assert relive.version == 3
+    assert graphs_identical(relive.graph, live.graph)
+    # the replayed LiveGraph stays live: more deltas land in the same log
+    relive.apply_delta(inserts=_ap_inserts([2], [1000001]))
+    assert len(log) == 3  # original handle unaware...
+    assert len(DeltaLog.open(str(tmp_path / "log"))) == 4  # ...but durably 4
+
+
+def test_fresh_livegraph_rejects_nonempty_log(dblp, tmp_path):
+    log, _ = _logged_live(dblp, tmp_path / "log")
+    with pytest.raises(ValueError, match="replay"):
+        LiveGraph(dblp, Q_DBLP, log=log)
+
+
+def test_torn_append_rejected_then_recovered(dblp, tmp_path):
+    """A record committed but never certified by the manifest (crash
+    between the two appends) is rejected at open; recover=True drops the
+    tail and replay returns the last acknowledged graph."""
+    log, live = _logged_live(dblp, tmp_path / "log")
+    acked = live.graph
+    # simulate the crash: commit entry 3's record without the manifest
+    log.store.write_record(
+        "delta_000003",
+        {"ins0_0": np.array([9]), "ins0_1": np.array([1000011])},
+        meta={"index": 3, "inserts": [["AuthorPub", ["aid", "pid"]]],
+              "deletes": []},
+    )
+    with pytest.raises(SpillError, match="uncertified"):
+        DeltaLog.open(str(tmp_path / "log"))
+    recovered = DeltaLog(str(tmp_path / "log"), create=False, recover=True)
+    assert len(recovered) == 3
+    relive = LiveGraph.replay(dblp, Q_DBLP, recovered)
+    assert graphs_identical(relive.graph, acked)
+
+
+def test_tmp_litter_rejected_then_recovered(dblp, tmp_path):
+    _logged_live(dblp, tmp_path / "log")
+    os.makedirs(str(tmp_path / "log" / "delta_000099.tmp-123"))
+    with pytest.raises(SpillError):
+        DeltaLog.open(str(tmp_path / "log"))
+    recovered = DeltaLog(str(tmp_path / "log"), create=False, recover=True)
+    assert len(recovered) == 3
+
+
+def test_truncated_certified_payload_rejected(dblp, tmp_path):
+    """Corruption of a *certified* entry is never recovered over — the
+    log refuses to replay rather than rebuild a wrong graph."""
+    _logged_live(dblp, tmp_path / "log")
+    rdir = str(tmp_path / "log" / "delta_000001")
+    target = next(f for f in sorted(os.listdir(rdir)) if f.endswith(".bin"))
+    with open(os.path.join(rdir, target), "r+b") as f:
+        f.truncate(2)
+    with pytest.raises(SpillError, match="truncated"):
+        DeltaLog.open(str(tmp_path / "log"))
+    with pytest.raises(SpillError, match="truncated"):
+        DeltaLog(str(tmp_path / "log"), create=False, recover=True)
+
+
+def test_missing_manifest_with_records_rejected(dblp, tmp_path):
+    _logged_live(dblp, tmp_path / "log")
+    os.remove(str(tmp_path / "log" / SPILL_MANIFEST))
+    with pytest.raises(SpillError, match="certified"):
+        DeltaLog(str(tmp_path / "log"), create=False)
+
+
+def test_manifest_kind_checked(tmp_path):
+    from repro.core import ShardSpillStore
+
+    store = ShardSpillStore(str(tmp_path / "s"))
+    store.finalize(meta={"kind": "something_else"})
+    with pytest.raises(SpillError, match="delta log"):
+        DeltaLog.open(str(tmp_path / "s"))
+
+
+# -- pipeline resume: base graph + log -> current device graph ---------------
+
+def test_pipeline_resumes_from_base_plus_log(dblp, tmp_path):
+    from repro.data.pipeline import sharded_extract_to_device
+
+    log, live = _logged_live(dblp, tmp_path / "log")
+    res, dev = sharded_extract_to_device(
+        dblp, Q_DBLP, n_shards=2, delta_log=DeltaLog.open(str(tmp_path / "log"))
+    )
+    assert graphs_identical(res.graph, live.graph)
+    assert dev.graph_version == 3
+    base_res, base_dev = sharded_extract_to_device(dblp, Q_DBLP, n_shards=2)
+    assert base_dev.graph_version == 0
+    assert not graphs_identical(base_res.graph, res.graph)
