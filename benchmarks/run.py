@@ -28,6 +28,7 @@ SECTIONS = [
     ("distributed", "Table 4: distributed analytics"),
     ("kernels", "kernel structural benchmark"),
     ("delta", "incremental extraction: delta apply vs full re-extract"),
+    ("serving", "continuous-batching multi-tenant serving tier"),
 ]
 
 

@@ -79,4 +79,54 @@ print(
 )
 PY
 
+echo "== serving tier (BENCH_serving.json) =="
+# the smoke run above already ran the serving section and wrote the
+# artifact; assert its claims here.  Gates: (a) continuous batching beats
+# the synchronous flush baseline on p99 at equal offered QPS (the tier's
+# reason to exist — a barrier-free scheduler that loses on tails is a
+# regression); (b) batch occupancy stays above the committed floor (the
+# bucket widths are not allowed to pad the win away); (c) the result
+# cache actually hits on the repeated-query scenario; (d) LRU eviction
+# under the byte budget is loss-free (byte-identical answers) and the
+# budget genuinely forced evictions under a budget smaller than the
+# packed sum; (e) no executable re-traced on reuse; (f) the absolute
+# p99 stays under the committed ceiling in benchmarks/serving_baseline.json
+# (full runs only — smoke sizes are not comparable to the baseline).
+python - <<'PY'
+import json
+with open("BENCH_serving.json") as fh:
+    r = json.load(fh)
+with open("benchmarks/serving_baseline.json") as fh:
+    base = json.load(fh)
+cont, sync = r["continuous"], r["sync_flush"]
+assert cont["p99_ms"] < sync["p99_ms"], (
+    f"continuous p99 {cont['p99_ms']:.2f}ms lost to sync flush "
+    f"{sync['p99_ms']:.2f}ms at {r['reference_qps']:.0f} qps"
+)
+assert cont["occupancy"] >= base["occupancy_min"], (
+    f"occupancy {cont['occupancy']:.2f} below floor {base['occupancy_min']}"
+)
+rq = r["repeated_queries"]
+assert rq["result_cache_hit_rate"] > base["result_cache_hit_rate_min"], (
+    f"result cache never hit: {rq['result_cache_hit_rate']:.2f}"
+)
+mt = r["multi_tenant"]
+assert mt["byte_identical"], "eviction/reload changed answer bytes"
+assert mt["n_evictions"] > 0, "budget never forced an eviction"
+assert mt["budget_bytes"] < mt["sum_packed_bytes"], "budget not binding"
+assert r["bucket_churn"]["retraces"] == 0, "executable re-traced on reuse"
+if not r["smoke"]:
+    assert cont["p99_ms"] <= base["continuous_p99_ms_max"], (
+        f"continuous p99 {cont['p99_ms']:.2f}ms over committed ceiling "
+        f"{base['continuous_p99_ms_max']}ms"
+    )
+print(
+    f"continuous p99 {cont['p99_ms']:.2f}ms < sync {sync['p99_ms']:.2f}ms "
+    f"at {r['reference_qps']:.0f} qps; occupancy {cont['occupancy']:.2f}; "
+    f"result-cache hit rate {rq['result_cache_hit_rate']:.2f}; "
+    f"{mt['n_evictions']} evictions byte-identical under "
+    f"{mt['budget_bytes']}B < {mt['sum_packed_bytes']}B"
+)
+PY
+
 echo "== all gates passed =="

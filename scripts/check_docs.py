@@ -41,11 +41,13 @@ REQUIRED_SECTIONS = {
         "## §7 ",
         "## §8 ",
         "## §9 ",
+        "## §10 ",
     ],
     "README.md": [
         "## Larger-than-memory extraction",
         "### Out-of-core assembly",
         "## Graphs that stay fresh",
+        "## Serving many graphs",
     ],
 }
 

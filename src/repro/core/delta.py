@@ -267,7 +267,25 @@ class LiveGraph:
         self.catalog = catalog
         self.version = 0
         self.last_apply_seconds = 0.0
+        # version listeners (DESIGN.md §10): called after every successful
+        # apply with (graph, GraphVersion) — the serving tier's
+        # invalidation hook (result caches keyed on the old version die,
+        # device residency refreshes from the new host graph)
+        self._version_listeners: List = []
         self._build_full()
+
+    # -- invalidation hooks ---------------------------------------------------
+    def add_version_listener(self, callback) -> None:
+        """Register ``callback(graph, version)`` to fire after every
+        successful :meth:`apply_delta` (state already swapped, version
+        already bumped — the callback sees exactly what a fresh reader
+        would).  Listeners fire *after* the WAL append and the apply, so
+        a listener crash cannot lose an acknowledged write; exceptions
+        propagate to the caller of ``apply_delta``."""
+        self._version_listeners.append(callback)
+
+    def remove_version_listener(self, callback) -> None:
+        self._version_listeners.remove(callback)
 
     # -- base build -----------------------------------------------------------
     def _build_full(self) -> None:
@@ -472,7 +490,10 @@ class LiveGraph:
                 sum(t[1] for t in touched.values()),
             )
         self.last_apply_seconds = time.perf_counter() - t0
-        return self.graph, GraphVersion(self.version)
+        out = self.graph, GraphVersion(self.version)
+        for callback in list(self._version_listeners):
+            callback(*out)
+        return out
 
     def _apply_rule(
         self,

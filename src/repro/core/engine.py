@@ -56,8 +56,13 @@ __all__ = [
     "DevicePacked",
     "DeviceGraph",
     "Correction",
+    "ResidencyBudget",
+    "ResidencyError",
+    "device_graph_bytes",
+    "graph_shape_signature",
     "to_device",
     "to_device_packed",
+    "with_graph_version",
     "propagate",
 ]
 
@@ -308,6 +313,115 @@ class DevicePacked:
 
 
 DeviceGraph = Union[DeviceExpanded, DeviceCondensed, DevicePacked]
+
+
+# ---------------------------------------------------------------------------
+# Residency accounting and version-keyed dispatch (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def with_graph_version(graph: DeviceGraph, version: int) -> DeviceGraph:
+    """The same device graph stamped with a different delta version.
+
+    ``graph_version`` is static pytree metadata (it invalidates compiled
+    executables by changing the jit cache key), so two stamps of the same
+    arrays are distinct trace keys.  The serving tier uses this both ways:
+    re-stamping an upload after :meth:`~repro.core.delta.LiveGraph.
+    apply_delta`, and *normalizing* the version to 0 before dispatching a
+    cached executable — staleness is enforced by the version-keyed result
+    cache at admission, so the executable itself may be shared by every
+    version (and every tenant) with the same shape signature."""
+    return dataclasses.replace(graph, graph_version=int(version))
+
+
+def device_graph_bytes(graph: DeviceGraph) -> int:
+    """Device bytes held by one uploaded graph: the sum over every pytree
+    leaf (edge arrays, packed bitmaps, fused operand streams, correction
+    triples).  This is the unit the serving tier's :class:`ResidencyBudget`
+    charges per resident tenant."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(graph):
+        nbytes = getattr(leaf, "nbytes", None)
+        total += int(nbytes) if nbytes is not None else np.asarray(leaf).nbytes
+    return total
+
+
+def graph_shape_signature(graph: DeviceGraph) -> str:
+    """Hashable signature of a device graph's *compiled shape*: the pytree
+    structure (version normalized to 0) plus every leaf's shape and dtype.
+
+    Two graphs with equal signatures produce identical jit trace keys, so
+    a compiled propagation executable for one serves the other without
+    re-tracing — the key of the serving tier's executable cache
+    ``(kind, bucket, signature)`` (DESIGN.md §10).  The signature excludes
+    ``graph_version`` on purpose: version churn under a live delta stream
+    must not churn executables (staleness lives in the result cache)."""
+    import hashlib
+
+    leaves, treedef = jax.tree_util.tree_flatten(with_graph_version(graph, 0))
+    parts = [str(treedef)]
+    for leaf in leaves:
+        shape = tuple(getattr(leaf, "shape", np.asarray(leaf).shape))
+        dtype = getattr(leaf, "dtype", np.asarray(leaf).dtype)
+        parts.append(f"{shape}:{dtype}")
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()
+
+
+class ResidencyError(RuntimeError):
+    """A device-graph upload cannot fit the residency budget even after
+    every evictable tenant has been evicted (a single graph larger than
+    ``max_device_bytes`` is unsatisfiable — raise, never thrash)."""
+
+
+@dataclasses.dataclass
+class ResidencyBudget:
+    """Device-byte accounting for multi-graph serving residency.
+
+    The serving twin of :class:`repro.core.planner.ExtractionBudget`'s
+    assembly account (same charge/release discipline, bytes not rows):
+    every resident tenant's packed operands are charged while on device,
+    ``peak_resident_bytes`` bounds what the device ever held at once, and
+    the LRU eviction traffic is recorded so benches and tests can assert
+    the budget actually did work (``n_evictions > 0`` under pressure) —
+    not just that answers came back.
+
+    :meth:`charge` raises :class:`ResidencyError` on a violating upload;
+    the serving tier evicts least-recently-used tenants *before* charging,
+    so a raise here means a single graph exceeds the whole budget."""
+
+    max_device_bytes: Optional[int] = None
+    resident_bytes: int = 0          # live: bytes currently on device
+    peak_resident_bytes: int = 0     # max resident_bytes ever observed
+    uploaded_bytes: int = 0          # total bytes ever uploaded
+    evicted_bytes: int = 0           # total bytes freed by eviction
+    n_uploads: int = 0
+    n_evictions: int = 0
+
+    def would_fit(self, nbytes: int) -> bool:
+        return (
+            self.max_device_bytes is None
+            or self.resident_bytes + int(nbytes) <= self.max_device_bytes
+        )
+
+    def charge(self, nbytes: int, what: str = "device graph") -> None:
+        nbytes = int(nbytes)
+        if not self.would_fit(nbytes):
+            raise ResidencyError(
+                f"residency budget exceeded: {self.resident_bytes} resident "
+                f"+ {nbytes} uploading ({what}) > max_device_bytes="
+                f"{self.max_device_bytes}; evict a tenant or raise the budget"
+            )
+        self.resident_bytes += nbytes
+        self.uploaded_bytes += nbytes
+        self.n_uploads += 1
+        if self.resident_bytes > self.peak_resident_bytes:
+            self.peak_resident_bytes = self.resident_bytes
+
+    def release(self, nbytes: int, evicted: bool = False) -> None:
+        self.resident_bytes -= int(nbytes)
+        assert self.resident_bytes >= 0, "released more bytes than charged"
+        if evicted:
+            self.evicted_bytes += int(nbytes)
+            self.n_evictions += 1
 
 
 # ---------------------------------------------------------------------------

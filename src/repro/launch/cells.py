@@ -29,7 +29,10 @@ from ..models import gnn, sasrec, transformer
 from ..train import optimizer as opt_lib
 from ..train import steps
 
-__all__ = ["Cell", "build_cell", "all_cells"]
+__all__ = [
+    "Cell", "build_cell", "all_cells",
+    "ReplicaPlacement", "place_serving_replicas",
+]
 
 S = jax.ShapeDtypeStruct
 
@@ -382,6 +385,67 @@ def _graphgen_cell(arch, arch_mod, cfg, shape_name, mesh) -> Cell:
     args_sh["diag"] = _ns(mesh, rules, ("nodes",))
     return Cell(arch, shape_name, "analytics", pagerank_step, (args_s,),
                 (args_sh,), rules, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving replica placement (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaPlacement:
+    """One serving replica pinned to a contiguous device group."""
+
+    tenant: str
+    replica: int
+    devices: Tuple[int, ...]
+
+
+def place_serving_replicas(
+    tenants,
+    n_devices: int,
+    *,
+    group_size: int = 1,
+    replicas: int = 1,
+) -> list:
+    """Place ``replicas`` serving replicas per tenant over ``n_devices``.
+
+    Devices are carved into contiguous groups of ``group_size`` (a group
+    is one :class:`~repro.serve.tier.GraphServingTier` process's mesh);
+    tenant replicas go round-robin over the groups, so group load is
+    balanced to within one replica and two replicas of the same tenant
+    never share a group (they exist to survive that group).  Pure
+    planning — no devices are touched; launchers consume the returned
+    :class:`ReplicaPlacement` list.
+    """
+    tenants = list(tenants)
+    if group_size <= 0 or n_devices < group_size:
+        raise ValueError(
+            f"need at least one group of {group_size} devices, have "
+            f"{n_devices}"
+        )
+    groups = [
+        tuple(range(g * group_size, (g + 1) * group_size))
+        for g in range(n_devices // group_size)
+    ]
+    if replicas > len(groups):
+        raise ValueError(
+            f"{replicas} replicas per tenant need {replicas} distinct "
+            f"device groups, have {len(groups)}"
+        )
+    # consecutive slots per tenant: replicas land on consecutive groups
+    # (mod G), so with replicas <= len(groups) a tenant's replicas are
+    # always disjoint, and sequential slot assignment keeps group load
+    # balanced to within one replica
+    out = []
+    slot = 0
+    for tenant in tenants:
+        for r in range(replicas):
+            out.append(ReplicaPlacement(
+                tenant=tenant, replica=r,
+                devices=groups[slot % len(groups)],
+            ))
+            slot += 1
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,23 @@
 """Serving substrate: KV-cache serving loop, graph-analytics micro-batching,
-and request batching."""
-from .server import BatchedServer, GraphQuery, GraphQueryServer, Request
+request batching, and the continuous-batching multi-tenant tier."""
+from .server import BatchedServer, GraphQuery, GraphQueryServer, Request, ServerStats
+from .tier import (
+    ExecutableCacheStats,
+    GraphServingTier,
+    ResultCacheStats,
+    ServeRequest,
+    ServeResult,
+)
 
-__all__ = ["BatchedServer", "GraphQuery", "GraphQueryServer", "Request"]
+__all__ = [
+    "BatchedServer",
+    "GraphQuery",
+    "GraphQueryServer",
+    "Request",
+    "ServerStats",
+    "GraphServingTier",
+    "ServeRequest",
+    "ServeResult",
+    "ExecutableCacheStats",
+    "ResultCacheStats",
+]

@@ -30,7 +30,62 @@ from ..core.engine import DeviceGraph
 # methods (cached by sys.modules) so graph-analytics users of this module
 # don't pay for (or depend on) it.
 
-__all__ = ["Request", "BatchedServer", "GraphQuery", "GraphQueryServer"]
+__all__ = [
+    "Request",
+    "BatchedServer",
+    "GraphQuery",
+    "GraphQueryServer",
+    "ServerStats",
+]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Batching efficiency of one flush (or an accumulation of many).
+
+    ``queries_batched`` counts real queries answered by propagation
+    batches; ``slots_compiled`` counts the padded bucket slots those
+    batches occupied.  Their ratio is the **occupancy** — the fraction of
+    compiled SpMM columns doing real work — and its complement is the
+    bucket-padding waste, the quantity the fixed-width bucketing trades
+    for a bounded compile-shape count.  ``batch_widths_used`` maps padded
+    width -> batches answered at that width (the compile-shape census
+    that used to be counted on the server but never reported)."""
+
+    n_queries: int = 0           # queries answered (cache hits included)
+    n_batches: int = 0           # propagation batches launched
+    queries_batched: int = 0     # real queries inside those batches
+    slots_compiled: int = 0      # padded slots (sum of bucket widths used)
+    batch_widths_used: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def occupancy(self) -> float:
+        """Real queries per compiled slot in [0, 1]; 1.0 when idle."""
+        if self.slots_compiled == 0:
+            return 1.0
+        return self.queries_batched / self.slots_compiled
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of compiled slots that were bucket padding."""
+        return 1.0 - self.occupancy
+
+    def record_batch(self, n_real: int, width: int) -> None:
+        self.n_batches += 1
+        self.queries_batched += int(n_real)
+        self.slots_compiled += int(width)
+        self.batch_widths_used[width] = (
+            self.batch_widths_used.get(width, 0) + 1
+        )
+
+    def merge(self, other: "ServerStats") -> None:
+        """Fold another flush's stats into this accumulator."""
+        self.n_queries += other.n_queries
+        self.n_batches += other.n_batches
+        self.queries_batched += other.queries_batched
+        self.slots_compiled += other.slots_compiled
+        for w, c in other.batch_widths_used.items():
+            self.batch_widths_used[w] = self.batch_widths_used.get(w, 0) + c
 
 
 @dataclasses.dataclass
@@ -276,6 +331,14 @@ class GraphQueryServer:
         self.n_propagation_batches = 0
         # compile-shape accounting: {padded width: batches answered}
         self.batch_widths_used: Dict[int, int] = {}
+        # batching-efficiency accounting: lifetime accumulation and the
+        # last flush's snapshot (per-flush stats are also returned by
+        # flush(with_stats=True) / run(with_stats=True))
+        self.stats = ServerStats()
+        self.last_flush_stats = ServerStats()
+        # admission gate: True while an update_graph handoff is draining
+        # in-flight queries — submits are rejected, flush still runs
+        self.quiescing = False
         # set by from_condensed: streaming-correction build evidence
         self.correction_accounting = None
 
@@ -364,16 +427,33 @@ class GraphQueryServer:
             )
 
     def submit(self, query: GraphQuery) -> None:
+        if self.quiescing:
+            raise ValueError(
+                "server is quiescing for update_graph(): new admissions "
+                "are rejected while in-flight queries drain against "
+                f"version {self.graph_version}; resubmit after the swap"
+            )
         self._validate(query, set())
         self.pending.append(query)
         self._pending_qids.add(query.qid)
+
+    def begin_quiesce(self) -> None:
+        """Stop admitting new queries (submits raise) while keeping
+        :meth:`flush` available to drain the in-flight queue.  Under
+        continuous admission the queue is never naturally empty, so a
+        graph swap cannot wait for it to drain on its own — it closes the
+        door first, then drains what already got in."""
+        self.quiescing = True
+
+    def end_quiesce(self) -> None:
+        self.quiescing = False
 
     def update_graph(
         self,
         graph: DeviceGraph,
         counts_graph: Optional[DeviceGraph] = None,
         graph_version: Optional[int] = None,
-    ) -> None:
+    ) -> Dict[int, np.ndarray]:
         """Swap in a freshly extracted device graph (e.g. after
         :meth:`~repro.core.delta.LiveGraph.apply_delta`) and bump
         ``graph_version``.
@@ -381,14 +461,16 @@ class GraphQueryServer:
         The version lives in the device graphs' jit-static metadata, so
         the bump invalidates every compiled propagation executable and
         cached packed operand by construction — the next flush traces
-        against the new graph.  Pending queries must be flushed (or
-        dropped) first: they were validated against the old node space.
-        """
-        if self.pending:
-            raise ValueError(
-                f"{len(self.pending)} queries pending against version "
-                f"{self.graph_version}; flush() before update_graph()"
-            )
+        against the new graph.
+
+        Pending queries were validated against the *old* node space, so
+        they are owed an old-graph answer — but under continuous
+        admission the queue is never empty, so "flush first" would never
+        fire.  The handoff instead quiesces new admissions (submits raise
+        while the swap is in progress), drains the in-flight queue
+        against the old graph, then swaps and reopens.  Returns the
+        drained answers, keyed by qid, computed at the superseded
+        version."""
         if graph_version is None:
             graph_version = int(getattr(graph, "graph_version", 0))
             if graph_version == self.graph_version:
@@ -398,9 +480,20 @@ class GraphQueryServer:
                 f"graph_version must increase: {int(graph_version)} <= "
                 f"current {self.graph_version}"
             )
-        self.graph = graph
-        self.counts_graph = counts_graph if counts_graph is not None else graph
-        self.graph_version = int(graph_version)
+        self.begin_quiesce()
+        try:
+            # drain-in-flight: answered by the graph they were validated
+            # against.  A mid-drain failure leaves the queue intact and
+            # the server still quiesced on the old graph — retryable.
+            drained = self.flush() if self.pending else {}
+            self.graph = graph
+            self.counts_graph = (
+                counts_graph if counts_graph is not None else graph
+            )
+            self.graph_version = int(graph_version)
+        finally:
+            self.end_quiesce()
+        return drained
 
     def _answer_group(
         self, kind: str, group: List[GraphQuery]
@@ -431,34 +524,46 @@ class GraphQueryServer:
         res = np.asarray(res)
         return {q.qid: res[:, i] for i, q in enumerate(group)}, width
 
-    def flush(self) -> Dict[int, np.ndarray]:
-        """Answer everything queued; returns ``{qid: (n,) result}``."""
+    def flush(self, with_stats: bool = False):
+        """Answer everything queued; returns ``{qid: (n,) result}``, or
+        ``(answers, ServerStats)`` for this flush with
+        ``with_stats=True``.  The per-flush stats (occupancy, padding
+        waste, width census) are also kept on ``last_flush_stats`` and
+        accumulated into ``stats``."""
         out: Dict[int, np.ndarray] = {}
         by_kind: Dict[str, List[GraphQuery]] = {}
         for q in self.pending:
             by_kind.setdefault(q.kind, []).append(q)
-        n_batches = 0
-        widths: List[int] = []
+        flush_stats = ServerStats()
+        batches: List[Tuple[int, int]] = []   # (real queries, padded width)
         for kind, group in by_kind.items():
             for i in range(0, len(group), self.max_batch):
-                answers, width = self._answer_group(
-                    kind, group[i : i + self.max_batch]
-                )
+                chunk = group[i : i + self.max_batch]
+                answers, width = self._answer_group(kind, chunk)
                 out.update(answers)
-                widths.append(width)
-                n_batches += 1
+                batches.append((len(chunk), width))
         # queue and counters committed only once every group answered, so
         # a failure mid-flush leaves pending intact and counts unchanged
         # for a retry
-        self.n_propagation_batches += n_batches
-        self.n_queries += len(self.pending)
-        for w in widths:
-            self.batch_widths_used[w] = self.batch_widths_used.get(w, 0) + 1
+        flush_stats.n_queries = len(self.pending)
+        for n_real, w in batches:
+            flush_stats.record_batch(n_real, w)
+        self.n_propagation_batches += flush_stats.n_batches
+        self.n_queries += flush_stats.n_queries
+        for w, c in flush_stats.batch_widths_used.items():
+            self.batch_widths_used[w] = self.batch_widths_used.get(w, 0) + c
+        self.last_flush_stats = flush_stats
+        self.stats.merge(flush_stats)
         self.pending = []
         self._pending_qids = set()
-        return out
+        return (out, flush_stats) if with_stats else out
 
-    def run(self, queries: List[GraphQuery]) -> Dict[int, np.ndarray]:
+    def run(self, queries: List[GraphQuery], with_stats: bool = False):
+        if self.quiescing:
+            raise ValueError(
+                "server is quiescing for update_graph(); resubmit after "
+                "the swap"
+            )
         # validate the whole batch before enqueuing any of it, so a bad
         # query can't leave earlier ones orphaned in the queue
         seen: set = set()
@@ -468,4 +573,4 @@ class GraphQueryServer:
         for q in queries:
             self.pending.append(q)
             self._pending_qids.add(q.qid)
-        return self.flush()
+        return self.flush(with_stats=with_stats)

@@ -225,15 +225,17 @@ def test_stale_version_submits_rejected():
 
 def test_update_graph_bumps_version_and_invalidates():
     server, g = _server(version=0)
+    # pending queries no longer block the swap: update_graph quiesces new
+    # admissions, drains in-flight against the old graph, then swaps
+    # (regression-tested in detail in test_serving_tier.py)
     server.submit(GraphQuery(1, "bfs", 0))
-    with pytest.raises(ValueError, match="flush"):
-        server.update_graph(server.graph)
-    server.flush()
     old = server.graph
     corr = dedup.build_correction(g)
     fresh = engine.to_device(g, correction=corr, graph_version=7)
-    server.update_graph(fresh, graph_version=7)
+    drained = server.update_graph(fresh, graph_version=7)
+    assert set(drained) == {1}   # in-flight answered against the old graph
     assert server.graph_version == 7 and server.graph is fresh
+    assert not server.pending and not server.quiescing
     # queries stamped against the superseded version now bounce
     with pytest.raises(ValueError, match="stale"):
         server.submit(GraphQuery(5, "bfs", 0, graph_version=0))

@@ -1,0 +1,353 @@
+"""Continuous-batching multi-tenant serving tier (DESIGN.md §10).
+
+The tier's four contracts, each tested where it can actually break:
+
+* residency — LRU eviction under the byte budget is loss-free: an
+  evicted tenant's next query re-uploads from the retained host arrays
+  and answers byte-identically; an unsatisfiable budget raises instead
+  of thrashing.
+* staleness — a request stamped with a superseded ``graph_version``
+  bounces at submit, per tenant (the same stamp is fine on a tenant
+  still at that version).
+* caches — results are keyed on ``(tenant, kind, node, version)`` and a
+  ``LiveGraph.apply_delta`` invalidates exactly the bumped tenant's
+  entries; executables are keyed on ``(kind, width, shape signature)``
+  and shape-sharing tenants reuse one trace.
+* handoff — a version bump quiesces new admissions, drains in-flight
+  queries against the old graph, then swaps (the regression for the old
+  ``update_graph`` fully-drained-queue requirement).
+"""
+import numpy as np
+import pytest
+
+from conftest import random_membership_graph
+
+from repro.core import dedup, engine
+from repro.core.delta import LiveGraph
+from repro.core.dedup import graph_from_membership
+from repro.core.engine import ResidencyBudget, ResidencyError
+from repro.data.synth import dblp_catalog
+from repro.launch.cells import place_serving_replicas
+from repro.serve import (
+    GraphQuery,
+    GraphQueryServer,
+    GraphServingTier,
+    ServeRequest,
+    ServerStats,
+)
+
+Q_DBLP = (
+    "Nodes(ID, Name) :- Author(ID, Name).\n"
+    "Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID)."
+)
+
+
+def _two_tenant_tier(budget=None, **kw):
+    rng = np.random.default_rng(0)
+    tier = GraphServingTier(max_batch=8, budget=budget, **kw)
+    tier.add_tenant("A", random_membership_graph(30, 10, 4, rng))
+    tier.add_tenant("B", random_membership_graph(26, 9, 4, rng))
+    return tier
+
+
+def _reqs(tenant, kind, nodes, qid0=0):
+    return [ServeRequest(qid0 + i, tenant, kind, n) for i, n in enumerate(nodes)]
+
+
+# ---------------------------------------------------------------------------
+# Residency: LRU eviction is loss-free
+# ---------------------------------------------------------------------------
+
+def test_lru_evict_then_resubmit_byte_identical():
+    ref = _two_tenant_tier()
+    want_a = ref.serve(_reqs("A", "bfs", range(4)))
+    want_b = ref.serve(_reqs("B", "ppr", range(4), qid0=100))
+    per_tenant = {n: t.resident_bytes for n, t in ref.tenants.items()}
+
+    # budget fits one tenant at a time: every switch is an eviction
+    budget = ResidencyBudget(max_device_bytes=int(max(per_tenant.values()) * 1.2))
+    assert budget.max_device_bytes < sum(per_tenant.values())
+    tier = _two_tenant_tier(budget=budget, result_cache=False)
+    got_a1 = tier.serve(_reqs("A", "bfs", range(4)))
+    got_b = tier.serve(_reqs("B", "ppr", range(4), qid0=100))   # evicts A
+    got_a2 = tier.serve(_reqs("A", "bfs", range(4), qid0=200))  # evicts B
+    assert budget.n_evictions >= 2
+    assert tier.tenants["A"].n_uploads == 2   # evicted and re-uploaded
+    for q in want_a:
+        assert got_a1[q].tobytes() == want_a[q].tobytes()
+        assert got_a2[q + 200].tobytes() == want_a[q].tobytes()
+    for q in want_b:
+        assert got_b[q].tobytes() == want_b[q].tobytes()
+
+
+def test_unsatisfiable_budget_raises_instead_of_thrashing():
+    tier = _two_tenant_tier(budget=ResidencyBudget(max_device_bytes=64))
+    with pytest.raises(ResidencyError, match="budget"):
+        tier.serve(_reqs("A", "bfs", [0]))
+
+
+def test_explicit_evict_frees_budget_and_reload_matches():
+    tier = _two_tenant_tier()
+    first = tier.serve(_reqs("A", "common_neighbors", range(3)))
+    resident = tier.budget.resident_bytes
+    tier.evict_tenant("A")
+    assert tier.budget.resident_bytes < resident
+    assert tier.tenants["A"].device is None
+    tier.result_cache_enabled = False   # force recompute on reload
+    again = tier.serve(_reqs("A", "common_neighbors", range(3), qid0=50))
+    for q in first:
+        assert first[q].tobytes() == again[q + 50].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Staleness: per-tenant version stamps
+# ---------------------------------------------------------------------------
+
+def test_stale_version_rejects_across_tenants():
+    rng = np.random.default_rng(1)
+    tier = _two_tenant_tier()
+    fresh = random_membership_graph(30, 10, 4, rng)
+    tier.update_tenant("A", fresh, version=3)
+    with pytest.raises(ValueError, match="stale"):
+        tier.submit(ServeRequest(1, "A", "bfs", 0, graph_version=0))
+    # the same stamp is valid on tenant B, which is still at version 0
+    assert tier.submit(ServeRequest(2, "B", "bfs", 0, graph_version=0)) is None
+    assert tier.submit(ServeRequest(3, "A", "bfs", 0, graph_version=3)) is None
+    out = {r.qid for r in tier.drain()}
+    assert out == {2, 3}
+    with pytest.raises(ValueError, match="increase"):
+        tier.update_tenant("A", fresh, version=3)
+
+
+def test_submit_validation():
+    tier = _two_tenant_tier()
+    with pytest.raises(ValueError, match="unknown tenant"):
+        tier.submit(ServeRequest(1, "nope", "bfs", 0))
+    with pytest.raises(ValueError, match="unknown query kind"):
+        tier.submit(ServeRequest(1, "A", "pagerank_all", 0))
+    with pytest.raises(ValueError, match="out of range"):
+        tier.submit(ServeRequest(1, "A", "bfs", 10_000))
+    tier.submit(ServeRequest(1, "A", "bfs", 0))
+    with pytest.raises(ValueError, match="already pending"):
+        tier.submit(ServeRequest(1, "A", "ppr", 1))
+
+
+# ---------------------------------------------------------------------------
+# Result cache: keyed on version, invalidated per tenant
+# ---------------------------------------------------------------------------
+
+def _live_tier():
+    tier = GraphServingTier(max_batch=8)
+    for name, seed in (("A", 0), ("B", 1)):
+        cat = dblp_catalog(
+            n_authors=40, n_pubs=80, mean_authors_per_pub=3.0, seed=seed
+        )
+        tier.add_tenant(name, LiveGraph(cat, Q_DBLP, mode="condensed"))
+    return tier
+
+
+def test_result_cache_hit_after_unrelated_tenant_delta():
+    tier = _live_tier()
+    tier.serve(_reqs("A", "bfs", [0, 1]))
+    tier.serve(_reqs("B", "bfs", [0, 1], qid0=10))
+    assert tier.result_stats.hits == 0
+
+    # unrelated tenant's write: B bumps, A's cache must survive
+    live_b = tier.tenants["B"].live
+    live_b.apply_delta(inserts={"AuthorPub": {
+        "aid": np.array([0], dtype=np.int64),
+        "pid": np.array([999_999], dtype=np.int64),
+    }})
+    assert tier.tenants["B"].version == int(live_b.version)
+    assert tier.result_stats.invalidated > 0
+
+    res = tier.submit(ServeRequest(20, "A", "bfs", 0))
+    assert res is not None and res.cached          # A: still a hit
+    assert tier.submit(ServeRequest(21, "B", "bfs", 0)) is None   # B: miss
+    tier.drain()
+    assert tier.result_stats.hits == 1
+    # stamps against B's superseded version bounce
+    with pytest.raises(ValueError, match="stale"):
+        tier.submit(ServeRequest(22, "B", "bfs", 0, graph_version=0))
+
+
+def test_delta_drains_inflight_against_old_graph():
+    tier = _live_tier()
+    tier.submit(ServeRequest(1, "B", "bfs", 0))
+    old_version = tier.tenants["B"].version
+    baseline = GraphServingTier(max_batch=8)
+    baseline.add_tenant("B", tier.tenants["B"].host)
+    want = baseline.serve(_reqs("B", "bfs", [0], qid0=1))
+
+    tier.tenants["B"].live.apply_delta(inserts={"AuthorPub": {
+        "aid": np.array([1], dtype=np.int64),
+        "pid": np.array([999_998], dtype=np.int64),
+    }})
+    handoff = tier.take_handoff()
+    assert [r.qid for r in handoff] == [1]
+    assert handoff[0].graph_version == old_version
+    assert handoff[0].value.tobytes() == want[1].tobytes()
+    assert tier.n_pending == 0
+    assert not tier.tenants["B"].quiescing
+
+
+# ---------------------------------------------------------------------------
+# Executable cache: shared across shape-sharing graphs, no re-traces
+# ---------------------------------------------------------------------------
+
+def test_executable_cache_reuse_across_shape_sharing_graphs():
+    # disjoint same-size membership sets over the same node count: the
+    # two graphs differ in content but share every array shape, so their
+    # shape signatures — and compiled executables — coincide
+    ga = graph_from_membership(12, [{0, 1, 2}, {3, 4, 5}, {6, 7, 8}])
+    gb = graph_from_membership(12, [{0, 1, 3}, {2, 4, 6}, {5, 7, 8}])
+    assert (
+        engine.graph_shape_signature(engine.to_device(ga))
+        == engine.graph_shape_signature(engine.to_device(gb))
+    )
+    tier = GraphServingTier(max_batch=4, result_cache=False)
+    tier.add_tenant("A", ga, with_counts=False)
+    tier.add_tenant("B", gb, with_counts=False)
+    out_a = tier.serve(_reqs("A", "bfs", range(4)))
+    out_b = tier.serve(_reqs("B", "bfs", range(4), qid0=10))
+    assert tier.exec_stats.misses == 1 and tier.exec_stats.hits == 1
+    for entry in tier._executables.values():
+        assert entry.traces[0] == 1, "shape-sharing tenant re-traced"
+    # shared executable, different answers: content still matters
+    assert out_a[0].shape == out_b[10].shape
+    assert any(out_a[i].tobytes() != out_b[10 + i].tobytes() for i in range(4))
+
+
+def test_executable_cache_warm_eviction():
+    tier = _two_tenant_tier(max_executables=2, result_cache=False)
+    tier.serve(_reqs("A", "bfs", range(2)))
+    tier.serve(_reqs("A", "ppr", range(2), qid0=10))
+    tier.serve(_reqs("A", "common_neighbors", range(2), qid0=20))
+    assert tier.exec_stats.evictions == 1
+    assert len(tier._executables) == 2
+
+
+def test_bucket_version_churn_does_not_retrace():
+    """Version bumps must not invalidate executables: dispatch strips the
+    version (staleness lives in the result cache), so the same (kind,
+    width, signature) serves every version with one trace."""
+    rng = np.random.default_rng(2)
+    g = random_membership_graph(20, 8, 4, rng)
+    tier = GraphServingTier(max_batch=4, result_cache=False)
+    tier.add_tenant("A", g, with_counts=False)
+    tier.serve(_reqs("A", "bfs", range(4)))
+    tier.update_tenant("A", g, version=1)
+    tier.serve(_reqs("A", "bfs", range(4), qid0=10))
+    assert tier.exec_stats.misses == 1
+    for entry in tier._executables.values():
+        assert entry.traces[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Quiesce handoff (GraphQueryServer regression + tier)
+# ---------------------------------------------------------------------------
+
+def test_server_quiesce_blocks_submits_until_swap_done():
+    rng = np.random.default_rng(3)
+    g = random_membership_graph(20, 8, 4, rng)
+    server = GraphQueryServer(engine.to_device(g))
+    server.begin_quiesce()
+    with pytest.raises(ValueError, match="quiescing"):
+        server.submit(GraphQuery(1, "bfs", 0))
+    with pytest.raises(ValueError, match="quiescing"):
+        server.run([GraphQuery(2, "bfs", 0)])
+    server.end_quiesce()
+    server.submit(GraphQuery(3, "bfs", 0))
+    assert set(server.flush()) == {3}
+
+
+def test_tier_quiescing_tenant_rejects_submit():
+    tier = _two_tenant_tier()
+    tier.tenants["A"].quiescing = True
+    with pytest.raises(ValueError, match="quiescing"):
+        tier.submit(ServeRequest(1, "A", "bfs", 0))
+    # other tenants keep admitting
+    assert tier.submit(ServeRequest(2, "B", "bfs", 0)) is None
+    tier.tenants["A"].quiescing = False
+    tier.drain()
+
+
+# ---------------------------------------------------------------------------
+# ServerStats: occupancy and padding waste
+# ---------------------------------------------------------------------------
+
+def test_server_stats_occupancy_math():
+    s = ServerStats()
+    assert s.occupancy == 1.0 and s.padding_waste == 0.0   # idle: no waste
+    s.record_batch(6, 8)
+    s.record_batch(8, 8)
+    assert s.occupancy == pytest.approx(14 / 16)
+    assert s.padding_waste == pytest.approx(2 / 16)
+    assert s.batch_widths_used == {8: 2}
+    other = ServerStats()
+    other.record_batch(2, 4)
+    s.merge(other)
+    assert s.occupancy == pytest.approx(16 / 20)
+    assert s.batch_widths_used == {8: 2, 4: 1}
+
+
+def test_tier_stats_track_occupancy():
+    tier = _two_tenant_tier(result_cache=False)
+    tier.serve(_reqs("A", "bfs", range(6)))   # 6 real in an 8-wide bucket
+    assert tier.stats.n_batches == 1
+    assert tier.stats.occupancy == pytest.approx(6 / 8)
+    assert tier.stats.batch_widths_used == {8: 1}
+
+
+# ---------------------------------------------------------------------------
+# Replica placement
+# ---------------------------------------------------------------------------
+
+def test_place_serving_replicas_balanced_and_disjoint():
+    placements = place_serving_replicas(
+        ["A", "B", "C"], n_devices=8, group_size=2, replicas=2
+    )
+    assert len(placements) == 6
+    for p in placements:
+        assert len(p.devices) == 2
+        assert max(p.devices) < 8
+    # a tenant's replicas never share a device group
+    for t in "ABC":
+        groups = [p.devices for p in placements if p.tenant == t]
+        assert len(set(groups)) == len(groups) == 2
+    # load balanced to within one replica per group
+    load = {}
+    for p in placements:
+        load[p.devices] = load.get(p.devices, 0) + 1
+    assert max(load.values()) - min(load.values()) <= 1
+
+
+def test_place_serving_replicas_errors():
+    with pytest.raises(ValueError, match="group"):
+        place_serving_replicas(["A"], n_devices=2, group_size=4)
+    with pytest.raises(ValueError, match="distinct"):
+        place_serving_replicas(["A"], n_devices=2, group_size=1, replicas=3)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end correctness: the tier is a scheduler, not a new algorithm
+# ---------------------------------------------------------------------------
+
+def test_tier_answers_match_direct_algorithms():
+    import jax.numpy as jnp
+
+    from repro.core import algorithms
+
+    rng = np.random.default_rng(4)
+    g = random_membership_graph(24, 8, 4, rng)
+    corr = dedup.build_correction(g)
+    dev = engine.to_device(g, correction=corr)
+    tier = GraphServingTier(max_batch=4)
+    tier.add_tenant("A", g, correction=corr)
+    nodes = [0, 3, 7, 11]
+    got = tier.serve(_reqs("A", "bfs", nodes))
+    want = np.asarray(
+        algorithms.bfs_multi(dev, jnp.asarray(nodes, dtype=jnp.int32))
+    )
+    for i, q in enumerate(nodes):
+        assert np.array_equal(got[i], want[:, i]), q
