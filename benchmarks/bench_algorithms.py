@@ -8,13 +8,22 @@ Plus the batched-frontier comparison (DESIGN.md §3): B multi-source
 analyses as one (n, B) propagation vs a per-source Python loop — the
 amortization that makes the condensed representation pay off under
 serving traffic.
+
+Plus the condensation-native analytics rows (DESIGN.md §11): SCC,
+triangles, and the min-plus/max-min weighted semirings, each with an
+in-bench parity check (condensed-vs-expanded equality AND batched ==
+looped single-source oracle) written to ``BENCH_algorithms.json`` —
+scripts/check.sh fails when any parity flag is false.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import algorithms
+from repro.core import algorithms, dedup
 
 from .common import emit, paper_datasets, representations, time_call
 
@@ -52,8 +61,93 @@ def _batched_vs_looped(name: str, rname: str, rep, n: int) -> list:
     return rows
 
 
+def _analytics_rows(name: str, g, reps) -> list:
+    """Condensation-native analytics: timed batched vs looped, with the
+    parity verdicts the check.sh gate enforces.  Parity means (a) the
+    condensed DEDUP-C result equals the same algorithm on the explicit
+    expansion (byte-identical), and (b) the batched path equals the
+    looped single-source oracle."""
+    dev, exp = reps["DEDUP-C"], reps["EXP"]
+    n = g.n_real
+    sources = np.arange(BATCH, dtype=np.int32) % n
+    srcs_j = jnp.asarray(sources)
+    out = []
+
+    def record(algo, parity, batched_s, looped_s):
+        out.append({
+            "name": f"{algo}_{name}",
+            "parity": bool(parity),
+            "batched_us": batched_s * 1e6,
+            "looped_us": looped_s * 1e6,
+            "speedup": looped_s / max(batched_s, 1e-12),
+        })
+
+    # min-plus shortest paths (hop costs; weighted parity is covered by
+    # the tier-2 oracle suite — here the timing story is batching)
+    d_b = np.asarray(algorithms.shortest_paths_multi(dev, srcs_j))
+    d_l = np.stack(
+        [np.asarray(algorithms.shortest_paths(dev, int(s))) for s in sources],
+        axis=1,
+    )
+    d_exp = np.asarray(algorithms.shortest_paths_multi(exp, srcs_j))
+    parity = np.array_equal(d_b, d_l) and np.array_equal(d_b, d_exp)
+    t_b = time_call(lambda: algorithms.shortest_paths_multi(dev, srcs_j))
+    t_l = time_call(
+        lambda: [algorithms.shortest_paths(dev, int(s)) for s in sources]
+    )
+    record("shortest", parity, t_b, t_l)
+
+    # max-min widest paths
+    w_b = np.asarray(algorithms.widest_paths_multi(dev, srcs_j))
+    w_l = np.stack(
+        [np.asarray(algorithms.widest_paths(dev, int(s))) for s in sources],
+        axis=1,
+    )
+    w_exp = np.asarray(algorithms.widest_paths_multi(exp, srcs_j))
+    parity = np.array_equal(w_b, w_l) and np.array_equal(w_b, w_exp)
+    t_b = time_call(lambda: algorithms.widest_paths_multi(dev, srcs_j))
+    t_l = time_call(
+        lambda: [algorithms.widest_paths(dev, int(s)) for s in sources]
+    )
+    record("widest", parity, t_b, t_l)
+
+    # SCC: pivot batches vs the batch=1 looped oracle
+    lab_b = algorithms.scc_labels(dev, batch=BATCH)
+    lab_l = algorithms.scc_labels(dev, batch=1)
+    lab_exp = algorithms.scc_labels(exp, batch=BATCH)
+    parity = np.array_equal(lab_b, lab_l) and np.array_equal(lab_b, lab_exp)
+    t_b = time_call(lambda: algorithms.scc_labels(dev, batch=BATCH), repeats=1)
+    t_l = time_call(lambda: algorithms.scc_labels(dev, batch=1), repeats=1)
+    record("scc", parity, t_b, t_l)
+
+    # triangles: blocked identity sweep vs per-node (block=1) oracle;
+    # wedge mode (quadratic correction, raw kernel-path hops) is the
+    # timed variant, per-step the cross-check
+    block = min(128, n)
+    t_wedge = algorithms.triangle_counts(dev, block=block, mode="wedge")
+    t_step = algorithms.triangle_counts(dev, block=block, mode="per_step")
+    t_exp = algorithms.triangle_counts(exp, block=block)
+    t_one = algorithms.triangle_counts(dev, block=1, mode="wedge")
+    parity = (
+        np.array_equal(t_wedge, t_step)
+        and np.array_equal(t_wedge, t_exp)
+        and np.array_equal(t_wedge, t_one)
+    )
+    t_b = time_call(
+        lambda: algorithms.triangle_counts(dev, block=block, mode="wedge"),
+        repeats=1,
+    )
+    t_l = time_call(
+        lambda: algorithms.triangle_counts(dev, block=1, mode="wedge"),
+        repeats=1,
+    )
+    record("triangles", parity, t_b, t_l)
+    return out
+
+
 def run(smoke: bool = False) -> list:
     rows = []
+    analytics = []
     for name, g in paper_datasets(scale=0.04 if smoke else 0.2).items():
         reps = representations(g)
         # correctness gate (duplicate-sensitive algos skip raw C-DUP)
@@ -79,5 +173,25 @@ def run(smoke: bool = False) -> list:
         # batched multi-source vs per-source loop (serving amortization)
         n = g.n_real
         rows.extend(_batched_vs_looped(name, "DEDUP-C", reps["DEDUP-C"], n))
+        # condensation-native analytics parity + timing (gated); the
+        # smallest regime is enough for the gate, every regime on full
+        if not smoke or name == "dblp_like":
+            analytics.extend(_analytics_rows(name, g, reps))
+    report = {
+        "smoke": bool(smoke),
+        "rows": analytics,
+        "all_parity": all(r["parity"] for r in analytics),
+    }
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_algorithms.json"
+    )
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    for r in analytics:
+        rows.append((
+            f"{r['name']}_batched", r["batched_us"],
+            f"parity={r['parity']};speedup={r['speedup']:.2f}x",
+        ))
+        rows.append((f"{r['name']}_looped", r["looped_us"], f"B={BATCH}"))
     emit(rows)
     return rows

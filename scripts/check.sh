@@ -1,8 +1,50 @@
 #!/usr/bin/env bash
 # One-command PR gate: tier-1 tests, tier-2 property tests, smoke benches.
+#
+# `scripts/check.sh --tier2-oracle` runs ONLY the differential-oracle
+# section: the fixed-seed hypothesis oracle suite plus the
+# BENCH_algorithms.json parity gate (DESIGN.md §11).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+run_tier2_oracle() {
+  echo "== tier-2 oracle: differential oracle suite (fixed seed) =="
+  # HYPOTHESIS_PROFILE=oracle-ci (registered in tests/conftest.py) makes
+  # example generation derandomized — a red run reproduces with the same
+  # command.  Offline (no hypothesis) the @given tests skip via the
+  # conftest stub and the seeded _offline twins carry the gate.
+  HYPOTHESIS_PROFILE=oracle-ci PYTHONHASHSEED=0 python -m pytest -q \
+      tests/test_properties.py tests/test_algorithms_golden.py
+
+  echo "== algorithm parity rows (BENCH_algorithms.json) =="
+  # every new-algorithm row must report parity=true: the condensed
+  # DEDUP-C result byte-equal to the explicit expansion AND the batched
+  # path byte-equal to the looped single-source oracle.  Batched speedup
+  # over the looped oracle is reported (smoke timings are not gated).
+  if [ ! -f BENCH_algorithms.json ]; then
+    python -m benchmarks.run --smoke --only algorithms > /dev/null
+  fi
+  python - <<'PY'
+import json
+with open("BENCH_algorithms.json") as fh:
+    r = json.load(fh)
+assert r["rows"], "no condensation-native analytics rows ran"
+bad = [x["name"] for x in r["rows"] if not x["parity"]]
+assert not bad, f"oracle parity failed in: {bad}"
+assert r["all_parity"], "all_parity flag disagrees with rows"
+print(
+    "parity true over "
+    + ", ".join(f"{x['name']} ({x['speedup']:.1f}x batched)" for x in r["rows"])
+)
+PY
+}
+
+if [[ "${1:-}" == "--tier2-oracle" ]]; then
+  run_tier2_oracle
+  echo "== tier-2 oracle gates passed =="
+  exit 0
+fi
 
 echo "== tier-1 (unit + integration) =="
 python -m pytest -x -q -m "not tier2"
@@ -21,6 +63,8 @@ echo "== smoke benches (every section at toy sizes) =="
 # spilled peak resident assembly bytes must be strictly below the
 # no-spill accumulation and the tree-reduce re-merge byte-identical
 python -m benchmarks.run --smoke
+
+run_tier2_oracle
 
 echo "== kernels perf cells (BENCH_kernels.json) =="
 # the full smoke run above already ran the kernels section and wrote the

@@ -42,8 +42,10 @@ REQUIRED_SECTIONS = {
         "## §8 ",
         "## §9 ",
         "## §10 ",
+        "## §11 ",
     ],
     "README.md": [
+        "## Algorithm library",
         "## Larger-than-memory extraction",
         "### Out-of-core assembly",
         "## Graphs that stay fresh",

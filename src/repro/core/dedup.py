@@ -42,6 +42,7 @@ from .condensed import (
 __all__ = [
     "build_correction",
     "build_correction_streaming",
+    "build_wedge_correction",
     "StreamedCorrection",
     "BitmapRep",
     "bitmap1",
@@ -86,6 +87,84 @@ def _correction_from_multiplicities(
         corr = m - 1
     keep = corr > 0
     return s[keep], d[keep], corr[keep]
+
+
+def _coo_coalesce(
+    src: np.ndarray, dst: np.ndarray, val: np.ndarray, n: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    key = src.astype(np.int64) * n + dst.astype(np.int64)
+    uniq, inv = np.unique(key, return_inverse=True)
+    out = np.zeros(uniq.size, dtype=np.int64)
+    np.add.at(out, inv, val.astype(np.int64))
+    keep = out != 0
+    return (uniq[keep] // n), (uniq[keep] % n), out[keep]
+
+
+def _coo_matmul(
+    a: Tuple[np.ndarray, np.ndarray, np.ndarray],
+    b: Tuple[np.ndarray, np.ndarray, np.ndarray],
+    n: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse ``A @ B`` over (src, dst, val) COO triples, no dense n×n."""
+    as_, ad, av = a
+    bs, bd, bv = b
+    if as_.size == 0 or bs.size == 0:
+        e = np.zeros(0, np.int64)
+        return e, e.copy(), e.copy()
+    order = np.argsort(bs, kind="stable")
+    bs_s, bd_s, bv_s = bs[order], bd[order], bv[order]
+    lo = np.searchsorted(bs_s, ad, side="left")
+    hi = np.searchsorted(bs_s, ad, side="right")
+    cnt = hi - lo
+    total = int(cnt.sum())
+    if total == 0:
+        e = np.zeros(0, np.int64)
+        return e, e.copy(), e.copy()
+    rep = np.repeat(np.arange(as_.size), cnt)
+    offset = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+    idx = np.repeat(lo, cnt) + offset
+    return _coo_coalesce(
+        as_[rep], bd_s[idx], av[rep].astype(np.int64) * bv_s[idx], n
+    )
+
+
+def build_wedge_correction(
+    graph: CondensedGraph,
+    correction: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    drop_self_loops: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse W with  A² = M² − W:  the *wedge correction* (DESIGN.md §11).
+
+    The linear DEDUP-C identity ``A = M − D`` only makes single hops
+    exact; wedge counting (the two-hop building block of triangle
+    counting and clustering coefficients) squares it:
+
+        ``A² = (M − D)² = M² − (M·D + D·M − D²)``
+
+    so ``W = M·D + D·M − D²`` is exactly the count of *duplicate wedges*
+    — two-hop paths whose legs are realized by more than one condensed
+    path through shared virtual nodes — that raw C-DUP wedge propagation
+    over-counts.  Returned as coalesced (src, dst, count) triples built
+    sparsely from the expansion triples (no dense n×n materialization);
+    :func:`repro.core.engine.propagate_wedge` subtracts them in one
+    segment pass after two raw multiplicity hops.  ``W`` may carry
+    negative counts where ``D²`` dominates; that is expected — it is a
+    correction operator, not a multiplicity matrix.
+    """
+    if correction is None:
+        correction = build_correction(graph, drop_self_loops=drop_self_loops)
+    cs, cd, cm = (np.asarray(t) for t in tuple(correction))
+    D = (cs, cd, cm.astype(np.int64))
+    s, d, m = graph.multiplicities()
+    M = (s, d, m.astype(np.int64))
+    n = graph.n_real
+    md = _coo_matmul(M, D, n)
+    dm = _coo_matmul(D, M, n)
+    dd = _coo_matmul(D, D, n)
+    src = np.concatenate([md[0], dm[0], dd[0]])
+    dst = np.concatenate([md[1], dm[1], dd[1]])
+    val = np.concatenate([md[2], dm[2], -dd[2]])
+    return _coo_coalesce(src, dst, val, n)
 
 
 # Host accounting unit for one resident (src, dst, mult) int64 triple.

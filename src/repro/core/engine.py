@@ -64,6 +64,7 @@ __all__ = [
     "to_device_packed",
     "with_graph_version",
     "propagate",
+    "propagate_wedge",
 ]
 
 # Trace-time evidence that a propagation step dispatched to the Pallas
@@ -999,6 +1000,7 @@ def propagate(
     reverse: bool = False,
     hop_weight: Optional[float] = None,
     allow_duplicates: bool = False,
+    layer_weights: Optional[Tuple[Tuple[jnp.ndarray, ...], ...]] = None,
 ) -> jnp.ndarray:
     """One superstep: ⊕-combine ⊗-weighted messages along all edges.
 
@@ -1007,6 +1009,18 @@ def propagate(
     independent single-frontier calls (DESIGN.md §3).  ``hop_weight`` is
     applied once per *logical* (real->real) hop, not per condensed layer,
     so BFS hop counting matches the expanded graph.
+
+    ``layer_weights`` carries edge properties on condensed chains
+    (DESIGN.md §11): one tuple per chain, one ``(layer_size,)`` array per
+    *virtual* layer, ⊗-applied to the hidden frontier while it occupies
+    that layer.  A condensed path's weight is then the ⊗-product of its
+    virtual-node properties (min-plus: path cost = Σ weights; max-min:
+    path width = min capacity), while every incidence step stays an
+    unweighted SpMM — so :func:`~repro.core.semiring.kernelizable`
+    packed/Pallas dispatch is unaffected.  Direct edges carry no virtual
+    node, hence the weight identity (``semiring.one``).  Only idempotent
+    semirings are supported (the DEDUP-C correction algebra is
+    multiplicity-based and does not extend to weighted ring sums).
     """
     n_in = graph.n if isinstance(graph, DeviceExpanded) else graph.n_real
     if x.ndim not in (1, 2) or x.shape[0] != n_in:
@@ -1014,6 +1028,30 @@ def propagate(
             f"frontier must be ({n_in},) or ({n_in}, B); got shape {x.shape}"
         )
     x = shard_frontier(x)
+    if layer_weights is not None:
+        if isinstance(graph, DeviceExpanded):
+            raise ValueError(
+                "layer_weights are condensed-chain edge properties; the "
+                "expanded representation needs them folded into a dense "
+                "weighted matrix instead (tests/oracle.py does exactly that)"
+            )
+        if not semiring.idempotent:
+            raise ValueError(
+                "layer_weights require an idempotent semiring: the ring "
+                "correction (DEDUP-C) subtracts path multiplicities and "
+                "has no weighted analogue"
+            )
+        if len(layer_weights) != len(graph.chains):
+            raise ValueError(
+                f"layer_weights must cover all {len(graph.chains)} chains; "
+                f"got {len(layer_weights)}"
+            )
+        for ci, (cw, chain) in enumerate(zip(layer_weights, graph.chains)):
+            if len(cw) != len(chain) - 1:
+                raise ValueError(
+                    f"chain {ci} has {len(chain) - 1} virtual layers; got "
+                    f"{len(cw)} weight arrays"
+                )
     if isinstance(graph, DeviceExpanded):
         src, dst = (graph.dst, graph.src) if reverse else (graph.src, graph.dst)
         msgs = _gather(x, src)
@@ -1052,10 +1090,18 @@ def propagate(
     y = None
     for ci, chain in enumerate(graph.chains):
         seq: Sequence[DeviceBipartite] = chain[::-1] if reverse else chain
+        w_seq: Optional[Sequence[jnp.ndarray]] = None
+        if layer_weights is not None:
+            # weight i lives on virtual layer i; walking the chain
+            # backwards visits the layers in reverse order
+            cw = layer_weights[ci]
+            w_seq = cw[::-1] if reverse else cw
         h = x
         fuse_here = fused is not None and ci == len(graph.chains) - 1
-        for e in seq[:-1] if fuse_here else seq:
+        for si, e in enumerate(seq[:-1] if fuse_here else seq):
             h = _layer_propagate(graph, semiring, e, h, reverse)
+            if w_seq is not None and si < len(seq) - 1:
+                h = semiring.mul(h, _bcast(jnp.asarray(w_seq[si]), h))
         if fuse_here:
             h = _fused_layer_spmm(fused, h, x, graph.feature_block)
         h = _apply_hop(semiring, h, hop_weight)
@@ -1086,6 +1132,70 @@ def propagate(
                 semiring, x * _bcast(graph.diag_mult, x), hop_weight
             )
     return shard_frontier(y)
+
+
+def _correction_apply(
+    triples: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    x: jnp.ndarray,
+    n_real: int,
+    reverse: bool,
+) -> jnp.ndarray:
+    """``D·x`` (or ``Dᵀ·x``) for a sparse (src, dst, count) triple set."""
+    cs, cd, cm = triples
+    src, dst = (cd, cs) if reverse else (cs, cd)
+    return jax.ops.segment_sum(
+        _gather(x, src) * _bcast(cm, _gather(x, src)), dst, num_segments=n_real
+    )
+
+
+def propagate_wedge(
+    graph: DeviceGraph,
+    x: jnp.ndarray,
+    *,
+    reverse: bool = False,
+    wedge: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Exact two-hop ring propagation ``y = Aᵀ(Aᵀx)`` on a DEDUP-C graph
+    from *uncorrected* C-DUP hops (DESIGN.md §11).
+
+    The linear DEDUP-C identity ``A = M − D`` composes quadratically:
+
+        ``A² = (M − D)² = M² − (MD + DM − D²)``
+
+    so the exact wedge count is two raw multiplicity hops (each a plain
+    kernel-path SpMM — no per-step correction subtraction, no fused
+    epilogue needed) minus the *wedge correction* ``W = MD + DM − D²`` —
+    the duplicate wedges whose legs are multiple condensed paths through
+    shared virtual nodes.  With ``wedge`` triples precomputed by
+    :func:`repro.core.dedup.build_wedge_correction` the correction is one
+    sparse pass (``y = M(Mx) − Wx``); without them it is assembled on the
+    fly from the graph's own ``D`` triples
+    (``y = M(Mx) − M(Dx) − D(Mx) + D(Dx)``).  Byte-identical to two
+    per-step-corrected :func:`propagate` calls on integer frontiers.
+    """
+    if isinstance(graph, DeviceExpanded):
+        y = propagate(graph, x, PLUS_TIMES, reverse=reverse)
+        return propagate(graph, y, PLUS_TIMES, reverse=reverse)
+    if graph.correction is None:
+        if graph.deduplicated:
+            y = propagate(graph, x, PLUS_TIMES, reverse=reverse)
+            return propagate(graph, y, PLUS_TIMES, reverse=reverse)
+        raise ValueError(
+            "propagate_wedge needs a DEDUP-C correction: the quadratic "
+            "wedge correction is built from the linear D triples"
+        )
+    raw = dataclasses.replace(graph, correction=None, diag_mult=None)
+    mx = propagate(raw, x, PLUS_TIMES, reverse=reverse, allow_duplicates=True)
+    mmx = propagate(raw, mx, PLUS_TIMES, reverse=reverse, allow_duplicates=True)
+    if wedge is not None:
+        return shard_frontier(
+            mmx - _correction_apply(wedge, x, graph.n_real, reverse)
+        )
+    dx = _correction_apply(graph.correction, x, graph.n_real, reverse)
+    mdx = propagate(raw, dx, PLUS_TIMES, reverse=reverse, allow_duplicates=True)
+    dmx = _correction_apply(graph.correction, mx, graph.n_real, reverse)
+    ddx = _correction_apply(graph.correction, dx, graph.n_real, reverse)
+    return shard_frontier(mmx - mdx - dmx + ddx)
 
 
 def _bcast(w: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:

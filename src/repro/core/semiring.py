@@ -22,6 +22,7 @@ __all__ = [
     "PLUS_TIMES",
     "MIN_PLUS",
     "MAX_TIMES",
+    "MAX_MIN",
     "OR_AND",
     "KERNEL_SEMIRINGS",
     "kernelizable",
@@ -88,12 +89,29 @@ OR_AND = Semiring(
     idempotent=True,
 )
 
+# Widest / bottleneck paths over non-negative capacities (DESIGN.md §11):
+# a path's width is the min capacity along it, the best path the max over
+# widths.  OR_AND is the {0,1} special case; the general semiring carries
+# real capacities applied per virtual layer via ``propagate``'s
+# ``layer_weights`` (⊗ = min leaves unweighted incidence steps untouched,
+# since ⊗ by ``one = +inf`` is the identity — hence kernelizable).
+MAX_MIN = Semiring(
+    name="max_min",
+    add_kind="max",
+    mul=jnp.minimum,
+    zero=0.0,
+    one=jnp.inf,
+    idempotent=True,
+)
+
 
 # Semirings the bit-packed Pallas kernel realizes (DESIGN.md §6): over a
 # 0/1 incidence layer ⊗ by the incidence weight (the semiring one) is the
 # identity for all of these, so one kernel step is just the ⊕-reduction —
 # MXU dot for the ring sum, masked select for idempotent min/max.
-KERNEL_SEMIRINGS = frozenset({"plus_times", "min_plus", "max_times", "or_and"})
+KERNEL_SEMIRINGS = frozenset(
+    {"plus_times", "min_plus", "max_times", "or_and", "max_min"}
+)
 
 
 def kernelizable(semiring: Semiring) -> bool:

@@ -74,7 +74,27 @@ __all__ = [
     "GraphServingTier",
 ]
 
-KINDS = ("bfs", "ppr", "common_neighbors")
+KINDS = (
+    "bfs",
+    "ppr",
+    "common_neighbors",
+    "shortest",
+    "widest",
+    "scc",
+    "triangles",
+)
+
+# Host-driven analytics (DESIGN.md §11): computed by a Python-side sweep
+# of batched propagations rather than one jitted (n, B) call.  The whole
+# batch shares one sweep, and the per-(tenant, kind, node, version)
+# result cache absorbs repeats.
+HOST_KINDS = frozenset({"scc", "triangles"})
+
+# Kinds whose executables take the tenant's per-virtual-layer weights as
+# a call argument — weights are tenant state, but executables are shared
+# across tenants by (kind, width, shape signature), so they must never be
+# closed over.
+WEIGHTED_KINDS = frozenset({"shortest", "widest"})
 
 
 @dataclasses.dataclass
@@ -169,6 +189,8 @@ class _Tenant:
         drop_self_loops: bool,
         pin: bool,
         live=None,
+        layer_weights=None,
+        layer_capacities=None,
     ):
         self.name = name
         self.host = host
@@ -179,6 +201,8 @@ class _Tenant:
         self.drop_self_loops = drop_self_loops
         self.pin = pin
         self.live = live
+        self.layer_weights = layer_weights
+        self.layer_capacities = layer_capacities
         self.quiescing = False
         # device residency (None = evicted / never uploaded)
         self.device: Optional[DeviceGraph] = None
@@ -195,6 +219,12 @@ class _Tenant:
         if kind == "common_neighbors" and self.counts_device is not None:
             return self.counts_device
         return self.device
+
+    def weights_for(self, kind: str):
+        """Per-virtual-layer weight pytree passed to weighted executables
+        at call time (None = unweighted: hop-count distances /
+        reachability widths)."""
+        return self.layer_weights if kind == "shortest" else self.layer_capacities
 
 
 class GraphServingTier:
@@ -275,6 +305,8 @@ class GraphServingTier:
         drop_self_loops: bool = True,
         pin: bool = False,
         budget_triples: Optional[int] = None,
+        layer_weights=None,
+        layer_capacities=None,
     ) -> None:
         """Register one graph for serving.  ``source`` is a host
         :class:`CondensedGraph` or a live
@@ -285,7 +317,11 @@ class GraphServingTier:
         DEDUP-C build (under ``budget_triples`` when given); ``packed``
         uploads bit-packed SpMM operands
         (:func:`~repro.core.engine.to_device_packed`).  ``pin`` exempts
-        the tenant from LRU eviction."""
+        the tenant from LRU eviction.  ``layer_weights`` /
+        ``layer_capacities`` carry the tenant's per-virtual-layer edge
+        properties for the ``shortest`` / ``widest`` kinds (see
+        :func:`~repro.core.engine.propagate`); they are tenant state
+        handed to the shared executables as call arguments."""
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already registered")
         live = None
@@ -302,10 +338,37 @@ class GraphServingTier:
                 budget_triples=budget_triples,
                 drop_self_loops=drop_self_loops,
             )
+        def _as_weight_pytree(lw, what):
+            if lw is None:
+                return None
+            # Validate against the host chain structure here, at admission,
+            # so a mismatch fails with the tenant's name instead of deep
+            # inside a jitted serve step.
+            if len(lw) != len(host.chains):
+                raise ValueError(
+                    f"tenant {name!r}: {what} must cover all "
+                    f"{len(host.chains)} chains; got {len(lw)}"
+                )
+            for ci, (cw, chain) in enumerate(zip(lw, host.chains)):
+                n_virt = len(chain.edges) - 1
+                if len(cw) != n_virt:
+                    raise ValueError(
+                        f"tenant {name!r}: chain {ci} has {n_virt} virtual "
+                        f"layers; got {len(cw)} {what} arrays"
+                    )
+            return tuple(
+                tuple(jnp.asarray(w, dtype=jnp.float32) for w in chain_w)
+                for chain_w in lw
+            )
+
         tenant = _Tenant(
             name, host, correction, version,
             packed=packed, with_counts=with_counts,
             drop_self_loops=drop_self_loops, pin=pin, live=live,
+            layer_weights=_as_weight_pytree(layer_weights, "layer_weights"),
+            layer_capacities=_as_weight_pytree(
+                layer_capacities, "layer_capacities"
+            ),
         )
         self.tenants[name] = tenant
         if live is not None:
@@ -462,12 +525,48 @@ class GraphServingTier:
                     graph, seeds, damping=damping, num_iters=iters
                 )
 
-        else:  # common_neighbors
+        elif kind == "common_neighbors":
 
             def raw(graph, sources):
                 traces[0] += 1
                 return algorithms.common_neighbors_multi(graph, sources)
 
+        elif kind == "shortest":
+
+            def raw(graph, sources, layer_weights):
+                traces[0] += 1
+                return algorithms.shortest_paths_multi(
+                    graph, sources, layer_weights=layer_weights
+                )
+
+        elif kind == "widest":
+
+            def raw(graph, sources, layer_capacities):
+                traces[0] += 1
+                return algorithms.widest_paths_multi(
+                    graph, sources, layer_capacities=layer_capacities
+                )
+
+        elif kind == "scc":
+            # host-driven: one pivot sweep answers the whole batch — each
+            # column is the queried node's SCC membership indicator
+            def raw(graph, sources):
+                traces[0] += 1
+                labels = algorithms.scc_labels(graph)
+                cols = labels[np.asarray(sources)]
+                return (labels[:, None] == cols[None, :]).astype(np.float32)
+
+        else:  # triangles
+            # host-driven whole-graph analytic: every column is the full
+            # per-node triangle-count vector (the node is a handle, the
+            # batch shares one blocked sweep)
+            def raw(graph, sources):
+                traces[0] += 1
+                t = algorithms.triangle_counts(graph).astype(np.float32)
+                return np.tile(t[:, None], (1, int(np.asarray(sources).size)))
+
+        if kind in HOST_KINDS:
+            return _Executable(fn=raw, traces=traces)
         return _Executable(fn=jax.jit(raw), traces=traces)
 
     # -- admission ------------------------------------------------------------
@@ -577,10 +676,11 @@ class GraphServingTier:
         entry = self._executable(
             kind, width, graph_shape_signature(graph)
         )
-        res = np.asarray(entry.fn(
-            with_graph_version(graph, 0),
-            jnp.asarray(nodes, dtype=jnp.int32),
-        ))
+        call = (with_graph_version(graph, 0), jnp.asarray(nodes, dtype=jnp.int32))
+        if kind in WEIGHTED_KINDS:
+            res = np.asarray(entry.fn(*call, t.weights_for(kind)))
+        else:
+            res = np.asarray(entry.fn(*call))
         dt = time.perf_counter() - t0
         self.now += dt
         self.stats.record_batch(len(group), width)

@@ -13,6 +13,7 @@ import pytest
 import jax.numpy as jnp
 
 from conftest import random_membership_graph, random_multilayer_graph
+from oracle import bfs_ref, common_neighbors_ref, dense_adjacency, dense_multiplicity
 
 from repro.core import algorithms, dedup, engine
 from repro.core.semiring import MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES
@@ -153,9 +154,13 @@ def test_bfs_and_reachable_multi_match_single(seed):
     g, rng = _graph(seed)
     n = g.n_real
     sources = rng.integers(0, n, size=4)
+    # dense-expansion differential oracle (tests/oracle.py)
+    D_ref = bfs_ref(dense_adjacency(g), sources)
     for rep in (engine.to_device(g), engine.to_device(g.expand())):
         D = np.asarray(algorithms.bfs_multi(rep, jnp.asarray(sources)))
         R = np.asarray(algorithms.reachable_multi(rep, jnp.asarray(sources)))
+        assert np.array_equal(D, D_ref)
+        assert np.array_equal(R, np.isfinite(D_ref).astype(R.dtype))
         for i, s in enumerate(sources.tolist()):
             assert np.allclose(D[:, i], np.asarray(algorithms.bfs(rep, s))), i
             assert np.allclose(
@@ -187,11 +192,10 @@ def test_common_neighbors_multi_counts_multiplicity():
     rng = np.random.default_rng(3)
     g = random_membership_graph(20, 8, 4, rng)
     rep = engine.to_device(g, drop_self_loops=False)
-    M = g.expand().adjacency_multiplicity()
+    M = dense_multiplicity(g, drop_self_loops=False)
     nodes = np.array([0, 5, 11])
     C = np.asarray(algorithms.common_neighbors_multi(rep, jnp.asarray(nodes)))
-    for i, s in enumerate(nodes.tolist()):
-        assert np.allclose(C[:, i], M[s].astype(np.float32)), i
+    assert np.array_equal(C, common_neighbors_ref(M, nodes).astype(C.dtype))
 
 
 def test_one_hot_frontier_shape_and_values():

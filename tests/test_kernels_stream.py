@@ -12,10 +12,12 @@ import jax.numpy as jnp
 import pytest
 
 from conftest import random_bipartite, random_membership_graph
+from oracle import bipartite_semiring_ref
 
 from repro.core import dedup, engine
 from repro.core.condensed import BipartiteEdges
 from repro.core.semiring import (
+    MAX_MIN,
     MAX_TIMES,
     MIN_PLUS,
     OR_AND,
@@ -29,18 +31,20 @@ from repro.kernels.pack import (
     pack_bipartite,
     streamed_footprint_bytes,
 )
-from repro.kernels.ref import segment_semiring_ref
-
 # The lifted budget: the old dispatcher kept the (n_src_pad, Fb) source
 # column resident and fell back to XLA above this many bytes.
 OLD_COLUMN_BUDGET = 8 * 2**20
 
-SEMIRINGS = [PLUS_TIMES, MIN_PLUS, MAX_TIMES, OR_AND]
+SEMIRINGS = [PLUS_TIMES, MIN_PLUS, MAX_TIMES, OR_AND, MAX_MIN]
 
 
 def _frontier(rng, n, b, semiring):
     if semiring is MIN_PLUS:
         x = np.where(rng.random((n, b)) < 0.3, rng.random((n, b)), np.inf)
+    elif semiring is MAX_MIN:
+        # widths: mostly-zero non-negative, a few inf sources
+        x = np.where(rng.random((n, b)) < 0.3, rng.random((n, b)), 0.0)
+        x = np.where(rng.random((n, b)) < 0.05, np.inf, x)
     elif semiring in (MAX_TIMES, OR_AND):
         x = (rng.random((n, b)) < 0.4).astype(np.float64) * rng.random((n, b))
     else:
@@ -72,11 +76,11 @@ def test_kernel_matches_segment_oracle(shape, semiring, reverse):
     n_in = n_dst if reverse else n_src
     n_out = n_src if reverse else n_dst
     x = _frontier(rng, n_in, b, semiring)
-    src, dst = (e.dst, e.src) if reverse else (e.src, e.dst)
-    want = np.asarray(segment_semiring_ref(
-        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(x), n_out,
-        semiring=semiring,
-    ))
+    # shared NumPy differential oracle (tests/oracle.py) — no JAX on the
+    # reference side, so a bug in the segment path can't cancel out
+    want = bipartite_semiring_ref(e, x, semiring, reverse=reverse).astype(
+        np.float32
+    )
     got = np.asarray(bitmap_spmm(
         layer, jnp.asarray(x), backend="pallas",
         semiring=semiring, reverse=reverse,
@@ -132,9 +136,7 @@ def test_above_old_budget_column_dispatches_to_kernel_exactly():
     # integer-valued floats: sums are exact in f32, so exact equality
     x = rng.integers(-4, 5, size=(e.n_src, f)).astype(np.float32)
     got = np.asarray(bitmap_spmm(layer, jnp.asarray(x), backend="auto"))
-    want = np.asarray(segment_semiring_ref(
-        jnp.asarray(e.src), jnp.asarray(e.dst), jnp.asarray(x), e.n_dst
-    ))
+    want = bipartite_semiring_ref(e, x, PLUS_TIMES).astype(np.float32)
     assert np.array_equal(got, want)
 
 

@@ -20,7 +20,17 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import jax.numpy as jnp
+
 from conftest import expanded_simple_pairs, random_membership_graph
+from oracle import (
+    dense_adjacency,
+    scc_labels_ref,
+    shortest_paths_ref,
+    triangle_counts_ref,
+    weighted_dense_ref,
+    widest_paths_ref,
+)
 
 from repro.core import algorithms, dedup, engine
 from repro.core.condensed import (
@@ -29,7 +39,9 @@ from repro.core.condensed import (
     CondensedGraph,
     ExpansionAccounting,
 )
+from repro.core.extract import extract
 from repro.core.semiring import PLUS_TIMES
+from repro.data.synth import dblp_catalog, tpch_catalog
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +211,162 @@ def test_dedup_family_exact_cover(seed):
 @pytest.mark.parametrize("seed", [0, 5, 123])
 def test_dedup_family_exact_cover_offline(seed):
     _check_dedup_family_exact_cover(seed)
+
+
+# ---------------------------------------------------------------------------
+# (d) Condensation-native analytics vs the dense-expansion oracle
+# (DESIGN.md §11): random catalogs -> extract -> condensed graph; SCC
+# labels, triangle counts, and min-plus distances must equal the NumPy
+# oracle on the materialized expansion — byte-identical across DEDUP
+# on/off (raw C-DUP, DEDUP-C correction) and fused/unfused kernel paths.
+# ---------------------------------------------------------------------------
+
+Q1_COAUTHOR = """
+Nodes(ID, Name) :- Author(ID, Name).
+Edges(ID1, ID2) :- AuthorPub(ID1, PubID), AuthorPub(ID2, PubID).
+"""
+
+Q2_COPURCHASE = """
+Nodes(ID, Name) :- Customer(ID, Name).
+Edges(ID1, ID2) :- Orders(ok1, ID1), LineItem(ok1, pk),
+                   Orders(ok2, ID2), LineItem(ok2, pk).
+"""
+
+
+def random_catalog_graph(rng: np.random.Generator) -> CondensedGraph:
+    """The issue's strategy: a random relational catalog, extracted to a
+    condensed graph — single-layer DBLP co-author or 3-layer TPC-H
+    co-purchase, with randomized table sizes and skew."""
+    seed = int(rng.integers(1_000_000))
+    if rng.random() < 0.5:
+        cat = dblp_catalog(
+            n_authors=int(rng.integers(12, 45)),
+            n_pubs=int(rng.integers(15, 70)),
+            mean_authors_per_pub=float(rng.uniform(2.0, 5.0)),
+            seed=seed,
+        )
+        dsl = Q1_COAUTHOR
+    else:
+        cat = tpch_catalog(
+            n_customers=int(rng.integers(10, 35)),
+            n_orders=int(rng.integers(20, 70)),
+            n_parts=int(rng.integers(5, 20)),
+            mean_items_per_order=float(rng.uniform(2.0, 4.0)),
+            seed=seed,
+        )
+        dsl = Q2_COPURCHASE
+    return extract(cat, dsl, mode="condensed").graph
+
+
+def _analytics_reps(g):
+    """DEDUP off (raw C-DUP) and on (correction), plus the packed kernel
+    path with the DEDUP-C epilogue fused and unfused."""
+    corr = dedup.build_correction(g)
+    return corr, {
+        "C-DUP": engine.to_device(g),
+        "DEDUP-C": engine.to_device(g, correction=corr),
+        "PACKED-fused": engine.to_device_packed(
+            g, correction=corr, backend="pallas"
+        ),
+        "PACKED-unfused": engine.to_device_packed(
+            g, correction=corr, backend="pallas", fuse_correction=False
+        ),
+    }
+
+
+def _check_analytics_match_oracle(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    g = random_catalog_graph(rng)
+    A = dense_adjacency(g)
+    corr, reps = _analytics_reps(g)
+    sources = rng.integers(0, g.n_real, size=3)
+
+    # SCC labels: identical across every representation and DEDUP mode
+    lab_ref = scc_labels_ref(A)
+    for name, rep in reps.items():
+        assert np.array_equal(algorithms.scc_labels(rep, batch=8), lab_ref), name
+
+    # min-plus hop distances (idempotent: exact on raw C-DUP too)
+    d_ref = shortest_paths_ref(np.where(A > 0, 1.0, np.inf), sources)
+    for name, rep in reps.items():
+        d = np.asarray(algorithms.shortest_paths_multi(rep, jnp.asarray(sources)))
+        assert np.array_equal(d, d_ref), name
+
+    # triangles: ring propagation — needs DEDUP; per-step (linear DEDUP-C
+    # twice) and wedge (quadratic correction, raw hops) must both be
+    # byte-identical to the oracle, on segment and packed paths alike
+    t_ref = triangle_counts_ref(A)
+    wedge = dedup.build_wedge_correction(g, correction=corr)
+    for name in ("DEDUP-C", "PACKED-fused", "PACKED-unfused"):
+        for kw in (dict(mode="per_step"), dict(mode="wedge"), dict(wedge=wedge)):
+            t = algorithms.triangle_counts(reps[name], block=32, **kw)
+            assert np.array_equal(t, t_ref), (name, kw)
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=15, deadline=None)
+def test_analytics_match_dense_oracle(seed):
+    _check_analytics_match_oracle(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 8, 77])
+def test_analytics_match_dense_oracle_offline(seed):
+    _check_analytics_match_oracle(seed)
+
+
+def _check_weighted_semirings_match_oracle(seed: int) -> None:
+    """Per-virtual-layer weights: min-plus costs and max-min capacities
+    on the condensed chains equal dense Bellman-Ford over the
+    path-enumerated edge matrix."""
+    rng = np.random.default_rng(seed)
+    g = random_catalog_graph(rng)
+    corr, reps = _analytics_reps(g)
+    sources = rng.integers(0, g.n_real, size=3)
+    lw = tuple(
+        tuple(
+            rng.integers(1, 6, size=s).astype(np.float32)
+            for s in ch.layer_sizes
+        )
+        for ch in g.chains
+    )
+    d_ref = shortest_paths_ref(
+        weighted_dense_ref(g, lw, kind="min_plus"), sources
+    )
+    w_ref = widest_paths_ref(
+        weighted_dense_ref(g, lw, kind="max_min"), sources
+    )
+    for name, rep in reps.items():
+        d = np.asarray(
+            algorithms.shortest_paths_multi(
+                rep, jnp.asarray(sources), layer_weights=lw
+            )
+        )
+        assert np.array_equal(d, d_ref), name
+        w = np.asarray(
+            algorithms.widest_paths_multi(
+                rep, jnp.asarray(sources), layer_capacities=lw
+            )
+        )
+        assert np.array_equal(w, w_ref), name
+        # looped single-source oracle == batched columns
+        for j, s in enumerate(sources.tolist()):
+            ds = np.asarray(
+                algorithms.shortest_paths(rep, s, layer_weights=lw)
+            )
+            assert np.array_equal(ds, d[:, j]), (name, s)
+
+
+@pytest.mark.tier2
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=10, deadline=None)
+def test_weighted_semirings_match_dense_oracle(seed):
+    _check_weighted_semirings_match_oracle(seed)
+
+
+@pytest.mark.parametrize("seed", [1, 13])
+def test_weighted_semirings_match_dense_oracle_offline(seed):
+    _check_weighted_semirings_match_oracle(seed)
 
 
 # ---------------------------------------------------------------------------

@@ -351,3 +351,112 @@ def test_tier_answers_match_direct_algorithms():
     )
     for i, q in enumerate(nodes):
         assert np.array_equal(got[i], want[:, i]), q
+
+
+# ---------------------------------------------------------------------------
+# Condensation-native analytics kinds (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_tier_serves_analytics_kinds_against_oracle():
+    """scc / triangles / shortest / widest answers equal the dense
+    oracle — through the full admission/batching/cache path."""
+    import jax.numpy as jnp
+
+    from oracle import (
+        bfs_ref,
+        dense_adjacency,
+        scc_labels_ref,
+        triangle_counts_ref,
+    )
+    from repro.core import algorithms
+
+    rng = np.random.default_rng(6)
+    g = random_membership_graph(24, 8, 4, rng)
+    A = dense_adjacency(g)
+    tier = GraphServingTier(max_batch=4)
+    tier.add_tenant("A", g)
+    nodes = [0, 3, 7]
+
+    got = tier.serve(_reqs("A", "shortest", nodes))
+    d_ref = bfs_ref(A, np.asarray(nodes))
+    for i in range(len(nodes)):
+        assert np.array_equal(got[i], d_ref[:, i]), i
+
+    got = tier.serve(_reqs("A", "widest", nodes))
+    for i in range(len(nodes)):
+        assert np.array_equal(got[i] > 0, np.isfinite(d_ref[:, i])), i
+        assert np.isposinf(got[i][nodes[i]])
+
+    lab_ref = scc_labels_ref(A)
+    got = tier.serve(_reqs("A", "scc", nodes))
+    for i, q in enumerate(nodes):
+        assert np.array_equal(got[i], (lab_ref == lab_ref[q]).astype(np.float32)), q
+
+    t_ref = triangle_counts_ref(A).astype(np.float32)
+    got = tier.serve(_reqs("A", "triangles", nodes))
+    for i in range(len(nodes)):
+        assert np.array_equal(got[i], t_ref), i
+
+    # host-driven kinds hit the result cache on resubmit
+    hits0 = tier.result_stats.hits
+    res = tier.submit(ServeRequest(990, "A", "scc", nodes[0]))
+    assert res is not None and res.cached
+    assert tier.result_stats.hits == hits0 + 1
+
+
+def test_tier_weighted_kinds_use_tenant_weights_not_shared_closure():
+    """Two shape-identical tenants with different layer weights must get
+    different `shortest` answers from the SAME cached executable — the
+    regression for weights leaking into the shared closure."""
+    import jax.numpy as jnp
+
+    from repro.core import algorithms
+
+    rng = np.random.default_rng(2)
+    g = random_membership_graph(20, 7, 4, rng)
+    sizes = [tuple(ch.layer_sizes) for ch in g.chains]
+    w_a = tuple(
+        tuple(np.full(s, 1.0, np.float32) for s in ls) for ls in sizes
+    )
+    w_b = tuple(
+        tuple(np.full(s, 3.0, np.float32) for s in ls) for ls in sizes
+    )
+    tier = GraphServingTier(max_batch=4)
+    tier.add_tenant("A", g, layer_weights=w_a)
+    tier.add_tenant("B", g, layer_weights=w_b)
+    got_a = tier.serve(_reqs("A", "shortest", [0, 5]))
+    got_b = tier.serve(_reqs("B", "shortest", [0, 5], qid0=10))
+    # one executable serves both (same kind/width/shape signature)
+    assert tier.exec_stats.misses == 1
+    dev = engine.to_device(g, correction=dedup.build_correction(g))
+    for i, (qa, qb) in enumerate(((0, 10), (1, 11))):
+        node = [0, 5][i]
+        da = np.asarray(algorithms.shortest_paths(dev, node, layer_weights=w_a))
+        db = np.asarray(algorithms.shortest_paths(dev, node, layer_weights=w_b))
+        assert np.array_equal(got_a[qa], da), node
+        assert np.array_equal(got_b[qb], db), node
+    # the weights genuinely differ (2-virtual-hop paths cost 2 vs 6)
+    finite = np.isfinite(got_a[0]) & (got_a[0] > 0)
+    assert (got_b[10][finite] > got_a[0][finite]).all()
+
+
+def test_tier_rejects_mismatched_weight_structure_at_admission():
+    """Weight pytrees that don't match the host chain structure must fail
+    at add_tenant (with the tenant's name) — not inside a jitted serve
+    step.  Both arity mismatches: wrong chain count (a direct-only graph
+    given per-chain weights) and wrong per-chain layer count."""
+    rng = np.random.default_rng(3)
+    g = random_membership_graph(16, 5, 4, rng)
+    n_virt = len(g.chains[0].edges) - 1
+    tier = GraphServingTier(max_batch=4)
+    with pytest.raises(ValueError, match="tenant 'w'.*chains"):
+        tier.add_tenant("w", g, layer_weights=[[1.0] * n_virt] * 3)
+    with pytest.raises(ValueError, match="tenant 'c'.*virtual"):
+        tier.add_tenant(
+            "c", g, layer_capacities=[[1.0] * (n_virt + 1)] * len(g.chains)
+        )
+    # well-formed weights still admit and serve
+    ok = [[1.0] * n_virt for _ in g.chains]
+    tier.add_tenant("ok", g, layer_weights=ok, layer_capacities=ok)
+    res = tier.serve(_reqs("ok", "shortest", [0]))
+    assert np.asarray(res[0]).shape == (16,)
