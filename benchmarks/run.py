@@ -29,6 +29,7 @@ SECTIONS = [
     ("kernels", "kernel structural benchmark"),
     ("delta", "incremental extraction: delta apply vs full re-extract"),
     ("serving", "continuous-batching multi-tenant serving tier"),
+    ("advisor", "cost-based extraction plans vs hand-picked configs"),
 ]
 
 

@@ -15,7 +15,8 @@ run_tier2_oracle() {
   # command.  Offline (no hypothesis) the @given tests skip via the
   # conftest stub and the seeded _offline twins carry the gate.
   HYPOTHESIS_PROFILE=oracle-ci PYTHONHASHSEED=0 python -m pytest -q \
-      tests/test_properties.py tests/test_algorithms_golden.py
+      tests/test_properties.py tests/test_algorithms_golden.py \
+      tests/test_advisor_plan.py
 
   echo "== algorithm parity rows (BENCH_algorithms.json) =="
   # every new-algorithm row must report parity=true: the condensed
@@ -172,5 +173,37 @@ print(
     f"{mt['budget_bytes']}B < {mt['sum_packed_bytes']}B"
 )
 PY
+
+echo "== cost-based plans (BENCH_advisor.json) =="
+# the smoke run above already ran the advisor section and wrote the
+# artifact; assert its claims here.  Gates: (a) on every fixture the
+# optimizer's chosen plan is never worse than the best hand-picked
+# BENCH row config — wall time strictly (same-measurement equality
+# when the chosen config IS a hand row) and peak residency under the
+# tie-band semantics documented in benchmarks/bench_advisor.py; (b)
+# the cost model's predicted peaks bound the measured peaks on every
+# chosen plan (the soundness contract budget pruning relies on).
+python - <<'PY2'
+import json
+with open("BENCH_advisor.json") as fh:
+    r = json.load(fh)
+assert r["fixtures"], "no advisor fixtures ran"
+slow = [f["name"] for f in r["fixtures"] if not f["never_worse_time"]]
+assert not slow, f"chosen plan lost on wall time in: {slow}"
+fat = [f["name"] for f in r["fixtures"] if not f["never_worse_bytes"]]
+assert not fat, f"chosen plan lost on peak residency in: {fat}"
+assert r["all_never_worse"], "all_never_worse flag disagrees with rows"
+unsound = [f["name"] for f in r["fixtures"] if not f["bound_ok"]]
+assert not unsound, f"predicted peaks below measured peaks in: {unsound}"
+assert r["all_bounds_ok"], "all_bounds_ok flag disagrees with rows"
+print(
+    "chosen plan never worse over "
+    + ", ".join(
+        f"{f['name']} ({f['chosen_is_hand_row'] or 'custom'} vs "
+        f"{f['best_hand']})" for f in r["fixtures"]
+    )
+    + "; predicted bounds hold"
+)
+PY2
 
 echo "== all gates passed =="

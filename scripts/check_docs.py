@@ -43,6 +43,7 @@ REQUIRED_SECTIONS = {
         "## §9 ",
         "## §10 ",
         "## §11 ",
+        "## §12 ",
     ],
     "README.md": [
         "## Algorithm library",
@@ -50,6 +51,7 @@ REQUIRED_SECTIONS = {
         "### Out-of-core assembly",
         "## Graphs that stay fresh",
         "## Serving many graphs",
+        "## Planning an extraction",
     ],
 }
 

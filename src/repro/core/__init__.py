@@ -23,6 +23,14 @@ from .extract import (
 from .planner import ExtractionBudget, ExtractionBudgetError
 from .relational import Catalog, ShardedTable, Table
 from .advisor import recommend
+from .cost import (
+    ExtractionPlan,
+    PlanConfig,
+    PlanReport,
+    Throughputs,
+    plan,
+    profile_query,
+)
 from .delta import GraphVersion, LiveGraph, apply_delta, mutate_catalog
 from .serialize import (
     DeltaLog,
@@ -54,6 +62,12 @@ __all__ = [
     "graphs_identical",
     "merge_spilled_graph",
     "recommend",
+    "plan",
+    "profile_query",
+    "ExtractionPlan",
+    "PlanConfig",
+    "PlanReport",
+    "Throughputs",
     "GraphVersion",
     "LiveGraph",
     "apply_delta",

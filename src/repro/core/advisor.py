@@ -1,4 +1,4 @@
-"""Representation advisor (paper §6.5).
+"""Representation advisor (paper §6.5) + cost-based plan front door.
 
 Given a freshly extracted C-DUP graph and workload hints, recommend the
 in-memory representation:
@@ -11,6 +11,15 @@ in-memory representation:
 On the TPU engine the BITMAP traversal semantics collapse into DEDUP-C
 (see DESIGN.md §2), so the device recommendation column differs from the
 paper's host recommendation where applicable.
+
+Since PR 10 the advisor is cost-based (DESIGN.md §12): the *pipeline*
+knobs (sharding, spilling, merge arity, pack method, fused correction)
+are chosen by :func:`repro.core.cost.plan` — re-exported here — and the
+*device* representation is routed through the same cost model when the
+caller hands over a measured :class:`~repro.kernels.autotune.
+CrossoverTable`: a measured-slower Pallas cell removes DEDUP-C's kernel
+advantage and can flip the device recommendation back to EXP for
+mildly-expanding graphs (``device_representation_costs``).
 """
 from __future__ import annotations
 
@@ -18,8 +27,24 @@ import dataclasses
 from typing import Optional
 
 from .condensed import CondensedGraph, ExpansionAccounting
+from .cost import (  # noqa: F401  (re-exported plan API)
+    ExtractionPlan,
+    PlanConfig,
+    PlanReport,
+    Throughputs,
+    device_representation_costs,
+    plan,
+)
 
-__all__ = ["Recommendation", "recommend"]
+__all__ = [
+    "Recommendation",
+    "recommend",
+    "plan",
+    "ExtractionPlan",
+    "PlanConfig",
+    "PlanReport",
+    "Throughputs",
+]
 
 
 @dataclasses.dataclass
@@ -33,6 +58,38 @@ class Recommendation:
     # residency under the caller's budget (None only if stats were
     # injected some other way)
     expansion_accounting: Optional[ExpansionAccounting] = None
+    # measured device costs (µs per pass) when a CrossoverTable was given
+    device_costs: Optional[dict] = None
+
+
+def _route_device(
+    rec: Recommendation, graph: CondensedGraph, crossover, n_features: int
+) -> Recommendation:
+    """Re-decide the device column from measured kernel timings.
+
+    The ladder's device pick assumes the condensed SpMM wins on the
+    kernel; a measured CrossoverTable can contradict that.  Only the
+    DEDUP-C pick is revisited — EXP/C-DUP picks have no kernel leg."""
+    if crossover is None or rec.device_representation != "DEDUP-C":
+        return rec
+    costs = device_representation_costs(
+        rec.expansion_ratio, rec.duplication_ratio, crossover,
+        n_src=graph.n_real, n_features=n_features,
+    )
+    if costs is None:
+        return rec
+    rec = dataclasses.replace(rec, device_costs=costs)
+    if costs["EXP"] < costs["DEDUP-C"]:
+        return dataclasses.replace(
+            rec,
+            device_representation="EXP",
+            reason=rec.reason + (
+                "; measured CrossoverTable makes DEDUP-C "
+                f"{costs['DEDUP-C']:.1f}us/pass vs EXP "
+                f"{costs['EXP']:.1f}us/pass — device flips to EXP"
+            ),
+        )
+    return rec
 
 
 def recommend(
@@ -42,6 +99,8 @@ def recommend(
     expand_margin: float = 1.2,
     budget_triples: Optional[int] = None,
     chunk_rows: Optional[int] = None,
+    crossover=None,
+    n_features: int = 128,
 ) -> Recommendation:
     """Recommend host/device representations for ``graph``.
 
@@ -52,6 +111,11 @@ def recommend(
     bounds that sweep's resident triples; the
     :class:`~repro.core.condensed.ExpansionAccounting` evidence rides on
     ``Recommendation.expansion_accounting``.
+
+    ``crossover`` (a measured :class:`~repro.kernels.autotune.
+    CrossoverTable`) routes the device column through the cost model
+    (DESIGN.md §12): a DEDUP-C pick survives only while the measured
+    kernel timings actually favor it at ``n_features``-wide batches.
     """
     cond = max(graph.n_edges_condensed, 1)
     acct = ExpansionAccounting(budget_triples=budget_triples)
@@ -78,15 +142,17 @@ def recommend(
         )
     if workload == "repeated":
         rep = "DEDUP-2" if graph.is_single_layer() else "DEDUP-1"
-        return Recommendation(
+        rec = Recommendation(
             rep, "DEDUP-C",
             "repeated analyses amortize one-time dedup rewriting "
             "(paper §6.5); device engine uses the vectorized correction",
             ratio, dup, acct,
         )
-    return Recommendation(
+        return _route_device(rec, graph, crossover, n_features)
+    rec = Recommendation(
         "BITMAP-2", "DEDUP-C",
         "multi-pass duplicate-sensitive analytics: BITMAP-2 on host "
         "iterators; correction-SpMV on device (DESIGN.md §2)",
         ratio, dup, acct,
     )
+    return _route_device(rec, graph, crossover, n_features)

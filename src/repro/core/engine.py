@@ -555,6 +555,7 @@ def _pack_edges(
     shard_edges: Optional[int] = None,
     measure: bool = False,
     measure_kwargs: Optional[dict] = None,
+    pack_method: str = "reduceat",
 ):
     """``dev`` is the already-uploaded COO layer from :func:`to_device`,
     reused so the edge arrays cross to the device only once.  Packs both
@@ -577,8 +578,10 @@ def _pack_edges(
     n_src_pad = max(-(-e.n_src // TILE), 1) * TILE
     n_dst_pad = max(-(-e.n_dst // TILE), 1) * TILE
     try:
-        fwd_bsb = pack_bipartite(e, shard_edges=shard_edges)
-        rev_bsb = pack_bipartite(e.reversed(), shard_edges=shard_edges)
+        fwd_bsb = pack_bipartite(e, method=pack_method, shard_edges=shard_edges)
+        rev_bsb = pack_bipartite(
+            e.reversed(), method=pack_method, shard_edges=shard_edges
+        )
         fwd_table = rev_table = None
         if measure:
             kw = measure_kwargs or {}
@@ -686,6 +689,7 @@ def to_device_packed(
     measure: bool = False,
     measure_kwargs: Optional[dict] = None,
     graph_version: int = 0,
+    pack_method: str = "reduceat",
 ) -> DevicePacked:
     """Like :func:`to_device`, additionally packing every condensed layer
     into bit-packed block-sparse SpMM operands (DESIGN.md §6) so batched
@@ -703,7 +707,10 @@ def to_device_packed(
     (:mod:`repro.kernels.autotune`); 'auto' dispatch then follows the
     measurement.  ``measure_kwargs`` forwards to
     :func:`~repro.kernels.autotune.measure_crossover` (batch sizes, ops,
-    a deterministic ``time_fn`` for tests).
+    a deterministic ``time_fn`` for tests).  ``pack_method`` selects the
+    host-side pack fold (``'reduceat'`` | ``'scatter'``, a cost-model
+    knob — DESIGN.md §12); the packed operands are byte-identical either
+    way.
     """
     base = to_device(
         graph,
@@ -714,7 +721,9 @@ def to_device_packed(
     assert isinstance(base, DeviceCondensed)
     chains_host = tuple(
         tuple(
-            _pack_edges(e, d, pack_shard_edges, measure, measure_kwargs)
+            _pack_edges(
+                e, d, pack_shard_edges, measure, measure_kwargs, pack_method
+            )
             for e, d in zip(c.edges, dc)
         )
         for c, dc in zip(graph.chains, base.chains)
@@ -723,7 +732,7 @@ def to_device_packed(
     direct = (
         _pack_edges(
             graph.direct, base.direct, pack_shard_edges, measure,
-            measure_kwargs,
+            measure_kwargs, pack_method,
         )[0]
         if graph.direct is not None
         else None

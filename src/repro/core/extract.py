@@ -378,6 +378,7 @@ def extract_query(
     budget: Optional[ExtractionBudget] = None,
     spill_dir: Optional[str] = None,
     merge_arity: int = 2,
+    plan: Optional[object] = None,
 ) -> ExtractionResult:
     """Plan + execute a parsed extraction query (paper §4.2 Steps 1–6).
 
@@ -395,7 +396,31 @@ def extract_query(
     runs as an ``merge_arity``-way tree reduce over the spilled records.
     The result is still byte-identical; assembly-budget violations
     (``budget.max_assembly_bytes``) spill instead of raising.
+
+    ``plan`` executes a :class:`repro.core.cost.ExtractionPlan` directly
+    (DESIGN.md §12): the plan's config overrides ``n_shards`` /
+    ``merge_arity`` / ``mode``, its budget caps are installed when the
+    caller did not pass a ``budget``, and a spilling plan without an
+    explicit ``spill_dir`` assembles through a temporary directory.
     """
+    if plan is not None:
+        cfg = plan.config
+        n_shards = int(cfg.n_shards)
+        merge_arity = int(cfg.merge_arity)
+        mode = plan.mode
+        if budget is None:
+            budget = plan.make_budget()
+        if cfg.spill and spill_dir is None:
+            import os as _os
+            import tempfile as _tempfile
+
+            with _tempfile.TemporaryDirectory(prefix="extract-plan-") as td:
+                return _extract_query_sharded(
+                    catalog, query, mode, preprocess, n_shards, budget,
+                    _os.path.join(td, "spill"), merge_arity,
+                )
+        if not cfg.spill:
+            spill_dir = None
     if n_shards != 1 or budget is not None or spill_dir is not None:
         return _extract_query_sharded(
             catalog, query, mode, preprocess, max(n_shards, 1), budget,
@@ -908,15 +933,22 @@ def extract(
     budget: Optional[ExtractionBudget] = None,
     spill_dir: Optional[str] = None,
     merge_arity: int = 2,
+    plan: Optional[object] = None,
 ) -> ExtractionResult:
     """Parse + plan + execute a DSL program against a catalog (paper §4.2;
     the Fig-1 entry point).  ``n_shards`` / ``budget`` select the sharded
     pipeline (DESIGN.md §7); ``spill_dir`` makes assembly out-of-core
-    with a ``merge_arity``-way tree-reduce merge (DESIGN.md §8)."""
+    with a ``merge_arity``-way tree-reduce merge (DESIGN.md §8).
+
+    ``plan`` takes a :class:`repro.core.cost.ExtractionPlan` (from
+    :func:`repro.core.cost.plan`, DESIGN.md §12): its config supplies
+    ``n_shards`` / ``merge_arity`` / spilling and — unless the caller
+    passes an explicit ``budget`` — its budget caps; the remaining
+    explicit knobs are ignored in its favor."""
     return extract_query(
         catalog, parse(dsl_text), mode=mode, preprocess=preprocess,
         n_shards=n_shards, budget=budget, spill_dir=spill_dir,
-        merge_arity=merge_arity,
+        merge_arity=merge_arity, plan=plan,
     )
 
 

@@ -35,6 +35,12 @@ class ColumnStats:
     min_value: Optional[float] = None
     max_value: Optional[float] = None
     null_frac: float = 0.0
+    # Most-common-value frequency: the largest number of rows sharing one
+    # value.  Gives a *sound* per-row join fan-out bound (a probe row can
+    # match at most max_count build rows), which the extraction cost model
+    # needs for budget-feasibility pruning where the |R||S|/d estimate is
+    # only an expectation.
+    max_count: int = 1
 
 
 class Table:
@@ -91,12 +97,13 @@ class Table:
     def analyze(self) -> None:
         """Populate catalog statistics (ANALYZE)."""
         for name, col in self.columns.items():
-            uniq = np.unique(col)
+            uniq, counts = np.unique(col, return_counts=True)
             numeric = np.issubdtype(col.dtype, np.number)
             self._stats[name] = ColumnStats(
                 n_distinct=int(uniq.size),
                 min_value=float(col.min()) if numeric and col.size else None,
                 max_value=float(col.max()) if numeric and col.size else None,
+                max_count=int(counts.max()) if counts.size else 0,
             )
 
     def stats(self, column: str) -> ColumnStats:

@@ -40,6 +40,8 @@ __all__ = [
     "load_condensed",
     "save_crossover_table",
     "load_crossover_table",
+    "save_plan_report",
+    "load_plan_report",
     "export_edge_list",
     "SpillError",
     "ShardSpillStore",
@@ -137,6 +139,29 @@ def load_crossover_table(path: str):
 
     with open(path) as f:
         return CrossoverTable.from_json(f.read())
+
+
+def save_plan_report(report, path: str) -> str:
+    """Persist an extraction-plan report
+    (:class:`repro.core.cost.PlanReport`) as canonical JSON — same atomic
+    write-replace discipline as :func:`save_crossover_table`, so an
+    audited plan decision can ride next to the artifacts it produced
+    (golden-tested: tests/test_advisor_plan.py).  Returns ``path``."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(report.to_json())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_plan_report(path: str):
+    """Load a report written by :func:`save_plan_report`."""
+    from .cost import PlanReport
+
+    with open(path) as f:
+        return PlanReport.from_json(f.read())
 
 
 def load_condensed(directory: str) -> CondensedGraph:

@@ -94,6 +94,7 @@ def sharded_extract_to_device(
     spill_dir: Optional[str] = None,
     max_assembly_bytes: Optional[int] = None,
     delta_log: Optional["object"] = None,
+    plan: Optional["object"] = None,
 ):
     """Catalog -> budgeted sharded extraction -> device graph, end to end.
 
@@ -120,9 +121,23 @@ def sharded_extract_to_device(
     a restarted server comes back serving the *current* graph, not the
     base snapshot.  Sharded spill staging applies to the base build only
     (delta batches are small); both paths honor ``max_resident_rows``.
+
+    ``plan``: a :class:`repro.core.cost.ExtractionPlan` from
+    :func:`repro.core.cost.plan` (DESIGN.md §12).  When given, it drives
+    both stages: extraction runs the plan's sharding/spill/budget config
+    (the explicit ``n_shards`` / ``max_*`` / ``spill_dir`` knobs are
+    ignored in its favor), and the device pack honors the plan's
+    ``pack_method`` / ``fuse_correction`` knobs.  Incompatible with
+    ``delta_log`` (a replayed graph's plan came from the base catalog).
     """
     from repro.core import dedup, engine
-    from repro.core.extract import extract_sharded
+    from repro.core.extract import extract, extract_sharded
+
+    pack_kwargs: Dict[str, object] = {}
+    if plan is not None and delta_log is not None:
+        raise ValueError("pass either plan= or delta_log=, not both")
+    if plan is not None and packed:
+        pack_kwargs = dict(plan.device_kwargs())
 
     graph_version = 0
     if delta_log is not None:
@@ -139,6 +154,9 @@ def sharded_extract_to_device(
         )
         res = live.result()
         graph_version = live.version
+    elif plan is not None:
+        res = extract(catalog, dsl_text, preprocess=False, plan=plan,
+                      spill_dir=spill_dir)
     else:
         res = extract_sharded(
             catalog, dsl_text, n_shards=n_shards,
@@ -151,7 +169,7 @@ def sharded_extract_to_device(
     if packed:
         dev = engine.to_device_packed(
             res.graph, correction=corr, pack_shard_edges=pack_shard_edges,
-            graph_version=graph_version,
+            graph_version=graph_version, **pack_kwargs,
         )
     else:
         dev = engine.to_device(

@@ -67,6 +67,7 @@ __all__ = [
     "streamed_footprint_bytes",
     "fits_vmem",
     "fused_fits_vmem",
+    "measure_pack_throughput",
     "TILE",
     "WORDS",
 ]
@@ -445,3 +446,33 @@ def pack_bipartite(
         n_dst=edges.n_dst,
         n_src=edges.n_src,
     )
+
+
+def measure_pack_throughput(
+    edges: BipartiteEdges,
+    methods: "tuple[str, ...]" = ("reduceat", "scatter"),
+    repeats: int = 3,
+    time_fn=None,
+) -> "dict[str, float]":
+    """Measured edges/second of ``pack_bipartite`` per fold method.
+
+    Feeds the extraction cost model (``repro.core.cost.Throughputs``) the
+    same way ``measure_crossover`` feeds kernel dispatch: a small measured
+    table that overrides the analytic default.  ``time_fn`` is injectable
+    for deterministic tests (same contract as ``autotune.measure_crossover``:
+    it receives a zero-arg callable and returns elapsed seconds).
+    """
+    import time as _time
+
+    out: "dict[str, float]" = {}
+    for method in methods:
+        if time_fn is not None:
+            elapsed = float(time_fn(lambda: pack_bipartite(edges, method=method)))
+        else:
+            elapsed = float("inf")
+            for _ in range(max(1, repeats)):
+                t0 = _time.perf_counter()
+                pack_bipartite(edges, method=method)
+                elapsed = min(elapsed, _time.perf_counter() - t0)
+        out[method] = edges.n_edges / max(elapsed, 1e-9)
+    return out

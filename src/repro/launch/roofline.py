@@ -25,7 +25,20 @@ import numpy as np
 
 from .mesh import DCI_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
-__all__ = ["collective_bytes", "roofline_terms", "model_flops", "RooflineReport"]
+__all__ = [
+    "collective_bytes", "roofline_terms", "model_flops", "RooflineReport",
+    "HOST_MEM_BW", "HOST_DISK_BW",
+]
+
+# Host-side throughput floors used by the extraction cost model
+# (repro.core.cost).  Same role as the TPU constants above, but for the
+# numpy extraction pipeline: sequential copy/scan bandwidth of one host
+# core, and the effective write+read bandwidth of the spill directory.
+# Deliberately conservative — the planner treats them as defaults that a
+# measured Throughputs overrides, exactly like a measured CrossoverTable
+# overrides the streamed-footprint formula in kernel dispatch.
+HOST_MEM_BW = 8e9       # bytes/s: host-side memcpy/scan floor
+HOST_DISK_BW = 0.8e9    # bytes/s: spill-record write + read-back
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
